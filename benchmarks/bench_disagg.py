@@ -1,0 +1,112 @@
+"""Disaggregated prefill/decode (survey §IV.B Splitwise/DistServe): decode
+tail-latency interference from co-located prefill, vs a disaggregated pair.
+Measured in engine steps between tokens of a decode stream while a heavy
+prefill workload churns.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_engine, small_model
+from repro.core import EngineConfig, Request, SamplingParams
+from repro.core.disagg import DisaggregatedServer
+from repro.core.scheduler import SchedulerConfig
+
+
+def _mk_reqs(cfg, rng, n):
+    return [Request(request_id=f"bg{i}", prompt=list(map(int, rng.integers(
+        2, cfg.vocab_size, size=120))), sampling=SamplingParams(max_new_tokens=2))
+        for i in range(n)]
+
+
+def run_colocated():
+    import time
+
+    rng = np.random.default_rng(5)
+    cfg, m, params = small_model()
+    eng = make_engine(enable_prefix_cache=False,
+                      scheduler=SchedulerConfig(max_batch_slots=4,
+                                                max_batched_tokens=192,
+                                                prefill_chunk=192,
+                                                enable_chunked_prefill=False))
+    fg = Request(request_id="fg", prompt=[3] * 8,
+                 sampling=SamplingParams(max_new_tokens=40))
+    eng.add_request(fg)
+    # jit warmup: one background prompt through the shapes before measuring
+    eng.add_request(_mk_reqs(cfg, rng, 1)[0])
+    for _ in range(30):
+        eng.step()
+    gaps, tprev = [], None
+    done = False
+    for step in range(500):
+        if not eng.scheduler.has_work():
+            break
+        before = len(eng.seqs["fg"].generated)
+        if len(eng.seqs["fg"].generated) >= 10 and not done:
+            for r in _mk_reqs(cfg, rng, 4):
+                eng.add_request(r)
+            done = True
+        eng.step()
+        if len(eng.seqs["fg"].generated) > before:
+            now = time.perf_counter()
+            if tprev is not None:
+                gaps.append(now - tprev)
+            tprev = now
+    return max(gaps[1:]) if len(gaps) > 1 else 0.0
+
+
+def run_disagg():
+    import time
+
+    rng = np.random.default_rng(5)
+    cfg, m, params = small_model()
+    mk = lambda: EngineConfig(
+        block_size=8, num_blocks=512, num_state_slots=32, max_model_len=256,
+        enable_prefix_cache=False,
+        scheduler=SchedulerConfig(max_batch_slots=4, max_batched_tokens=192,
+                                  prefill_chunk=192,
+                                  enable_chunked_prefill=False))
+    srv = DisaggregatedServer(m, params, prefill_cfg=mk(), decode_cfg=mk())
+    fg = Request(request_id="fg", prompt=[3] * 8,
+                 sampling=SamplingParams(max_new_tokens=40))
+    srv.add_request(fg)
+    srv.add_request(_mk_reqs(cfg, rng, 1)[0])
+    for _ in range(30):
+        srv.step()
+    gaps, tprev = [], None
+    done = False
+    for step in range(500):
+        if not srv.has_work():
+            break
+        seq = srv.seqs.get("fg")
+        before = len(seq.generated) if seq else 0
+        if seq and len(seq.generated) >= 10 and not done:
+            for r in _mk_reqs(cfg, rng, 4):
+                srv.add_request(r)
+            done = True
+        srv.step()
+        seq = srv.seqs.get("fg")
+        if seq and len(seq.generated) > before:
+            now = time.perf_counter()
+            if tprev is not None:
+                gaps.append(now - tprev)
+            tprev = now
+    return (max(gaps[1:]) if len(gaps) > 1 else 0.0), srv.stats
+
+
+def main():
+    # NOTE: on this 1-CPU container the two disagg "instances" share the core,
+    # so the decode instance still pays wall time while prefill runs — the
+    # separation shows up as decode steps never CONTAINING prefill work. On
+    # real disaggregated hardware the instances overlap fully.
+    stall_dis, stats = run_disagg()
+    stall_colo = run_colocated()
+    emit("disagg_colocated", stall_colo * 1e6,
+         f"max_decode_gap_ms={stall_colo*1e3:.1f}")
+    emit("disagg_split", stall_dis * 1e6,
+         f"max_decode_gap_ms={stall_dis*1e3:.1f};migrations={stats.migrated};"
+         f"kv_transfer_bytes={stats.transfer_bytes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Kernel micro-bench: pure-jnp oracle vs Pallas-interpret timing (CPU — the
+numbers validate plumbing, not TPU perf; TPU timing comes from the roofline)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.flash_attention import flash_prefill_attention
+from repro.kernels.paged_attention import paged_decode_attention
+
+
+def main():
+    rng = np.random.default_rng(7)
+    B, KV, G, D, P, NB, NP = 4, 2, 4, 64, 16, 64, 8
+    q = jnp.asarray(rng.normal(size=(B, KV, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    bt = jnp.asarray(np.stack([rng.choice(NB, NP, replace=False)
+                               for _ in range(B)]), jnp.int32)
+    ln = jnp.full((B,), NP * P, jnp.int32)
+    for impl in ("ref", "interpret"):
+        fn = lambda: paged_decode_attention(q, k, v, bt, ln, scale=0.125,
+                                            impl=impl).block_until_ready()
+        _, dt = timed(fn, warmup=2, iters=5)
+        emit(f"paged_attention_{impl}", dt * 1e6, f"B={B};pages={NP};P={P}")
+
+    S, H = 256, 4
+    q2 = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    for impl in ("ref", "interpret"):
+        fn = lambda: flash_prefill_attention(q2, k2, v2, scale=0.125, impl=impl,
+                                             q_block=64,
+                                             kv_block=64).block_until_ready()
+        _, dt = timed(fn, warmup=1, iters=3)
+        emit(f"flash_prefill_{impl}", dt * 1e6, f"B={B};S={S}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""MoE serving efficiency (survey §VI.B): capacity factor vs token-drop rate —
+Huang et al.'s static-vs-dynamic gating trade-off — plus dispatch tensor bytes
+(the all-to-all payload Lina balances).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro import configs
+from repro.models import moe as moe_mod
+from repro.models.common import split_params
+
+
+def main():
+    rng = np.random.default_rng(6)
+    cfg = dataclasses.replace(configs.smoke_config("jamba-v0.1-52b"))
+    p, _ = split_params(moe_mod.make_moe_params(jax.random.PRNGKey(1), cfg,
+                                                jnp.float32))
+    T = 4096
+    x = jnp.asarray(rng.normal(size=(T, cfg.d_model)), jnp.float32)
+    w, experts, _ = moe_mod.route(p, cfg, x)
+    E, k = cfg.num_experts, cfg.top_k
+    for cf in (1.0, 1.25, 1.5, 2.0):
+        capacity = max(1, int(np.ceil(T * k / E * cf)))
+        _, keep = moe_mod._dispatch_indices(experts, E, capacity)
+        drop_rate = 1.0 - float(jnp.mean(keep.astype(jnp.float32)))
+        dispatch_bytes = E * capacity * cfg.d_model * 2  # bf16 dispatch tensor
+        emit(f"moe_capacity_{cf}", 0.0,
+             f"capacity={capacity};drop_rate={drop_rate:.4f};"
+             f"dispatch_bytes={dispatch_bytes}")
+
+
+if __name__ == "__main__":
+    main()

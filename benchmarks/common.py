@@ -1,0 +1,72 @@
+"""Shared benchmark fixtures/helpers."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+
+_MODEL_CACHE = {}
+
+
+def small_model(arch: str = "olmo-1b"):
+    if arch not in _MODEL_CACHE:
+        cfg = configs.smoke_config(arch)
+        m = build_model(cfg)
+        params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=512))
+        _MODEL_CACHE[arch] = (cfg, m, params)
+    return _MODEL_CACHE[arch]
+
+
+def make_engine(arch: str = "olmo-1b", **kw) -> LLMEngine:
+    cfg, m, params = small_model(arch)
+    defaults = dict(block_size=8, num_blocks=512, num_state_slots=32,
+                    max_model_len=256,
+                    scheduler=SchedulerConfig(max_batch_slots=8,
+                                              max_batched_tokens=64,
+                                              prefill_chunk=16))
+    sched = kw.pop("scheduler", None)
+    if sched is not None:
+        defaults["scheduler"] = sched
+    defaults.update(kw)
+    return LLMEngine(m, params, EngineConfig(**defaults))
+
+
+def make_requests(cfg, n: int, rng: np.random.Generator, *, prompt_lo=10,
+                  prompt_hi=60, gen_lo=4, gen_hi=24, shared_prefix=0,
+                  user_fn=None) -> List[Request]:
+    reqs = []
+    prefix = list(map(int, rng.integers(2, cfg.vocab_size, size=max(shared_prefix, 1))))
+    for i in range(n):
+        body = list(map(int, rng.integers(2, cfg.vocab_size,
+                                          size=int(rng.integers(prompt_lo, prompt_hi)))))
+        prompt = (prefix[:shared_prefix] + body) if shared_prefix else body
+        reqs.append(Request(
+            request_id=f"r{i}", prompt=prompt,
+            user_id=user_fn(i) if user_fn else "u",
+            sampling=SamplingParams(
+                max_new_tokens=int(rng.integers(gen_lo, gen_hi)))))
+    return reqs
+
+
+def timed(fn, *args, warmup=0, iters=1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per survey table/claim (DESIGN.md §5).
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline terms for the full-size
+(arch x shape x mesh) grid come from the dry-run artifacts
+(``python -m repro.launch.roofline``), not from CPU wall time.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_batching, bench_chunked_prefill, bench_disagg,
+                        bench_kernels, bench_kv_quant, bench_moe, bench_paging,
+                        bench_prefix_cache)
+
+ALL = [
+    ("batching", bench_batching.main),
+    ("paging", bench_paging.main),
+    ("prefix_cache", bench_prefix_cache.main),
+    ("chunked_prefill", bench_chunked_prefill.main),
+    ("kv_quant", bench_kv_quant.main),
+    ("moe", bench_moe.main),
+    ("disagg", bench_disagg.main),
+    ("kernels", bench_kernels.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in ALL:
+        if only and only != name:
+            continue
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Disaggregated prefill/decode demo (survey §IV.B): two engine instances with
+explicit KV migration, vs a colocated baseline.
+
+    PYTHONPATH=src python examples/disagg_demo.py
+"""
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core.disagg import DisaggregatedServer
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+
+
+def main():
+    cfg = configs.smoke_config("starcoder2-3b")
+    model = build_model(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0), max_seq=512))
+    mk = lambda: EngineConfig(
+        block_size=16, num_blocks=256, num_state_slots=16, max_model_len=256,
+        enable_prefix_cache=False,
+        scheduler=SchedulerConfig(max_batch_slots=4, max_batched_tokens=96,
+                                  prefill_chunk=48))
+    srv = DisaggregatedServer(model, params, prefill_cfg=mk(), decode_cfg=mk())
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        srv.add_request(Request(
+            request_id=f"r{i}",
+            prompt=list(map(int, rng.integers(2, cfg.vocab_size,
+                                              size=int(rng.integers(40, 120))))),
+            sampling=SamplingParams(max_new_tokens=12)))
+    metrics = srv.run()
+    print(f"finished={len(metrics)} migrated={srv.stats.migrated} "
+          f"kv_transfer={srv.stats.transfer_bytes/2**20:.1f} MiB")
+    print(f"prefill-instance steps: {srv.prefill_engine.steps}, "
+          f"decode-instance steps: {srv.decode_engine.steps}")
+    ttfts = sorted(m.ttft for m in metrics)
+    print(f"TTFT p50={ttfts[len(ttfts)//2]*1e3:.0f}ms (prefill instance is "
+          f"never blocked behind decode batches)")
+
+
+if __name__ == "__main__":
+    main()

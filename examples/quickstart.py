@@ -1,0 +1,56 @@
+"""Quickstart: build a reduced model, generate text through the serving engine.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch gemma-2b]
+"""
+import argparse
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core.scheduler import SchedulerConfig
+from repro.data import ByteTokenizer
+from repro.models import build_model, split_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=list(configs.ARCHS))
+    ap.add_argument("--prompt", default="the quick brown fox")
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    # reduced config of the chosen architecture family (full configs are for
+    # the production mesh — see repro.launch.dryrun)
+    cfg = configs.smoke_config(args.arch)
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"family={cfg.family}")
+    model = build_model(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0), max_seq=256))
+
+    tok = ByteTokenizer()
+    prompt = [t % cfg.vocab_size for t in tok.encode(args.prompt)]
+
+    engine = LLMEngine(model, params, EngineConfig(
+        block_size=16, num_blocks=128, num_state_slots=8, max_model_len=256,
+        scheduler=SchedulerConfig(max_batch_slots=2, max_batched_tokens=64,
+                                  prefill_chunk=32)))
+    engine.add_request(Request(
+        request_id="demo", prompt=prompt,
+        sampling=SamplingParams(temperature=0.8, top_k=40,
+                                max_new_tokens=args.max_new_tokens)))
+    metrics = engine.run()
+    seq = engine.seqs["demo"]
+    print("prompt tokens:", prompt)
+    print("generated tokens:", seq.generated)
+    print("decoded (untrained model -> noise):",
+          repr(tok.decode(seq.generated)))
+    m = metrics[0]
+    print(f"ttft={m.ttft*1e3:.1f}ms tpot={m.tpot*1e3:.1f}ms qoe={m.qoe:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end serving driver: batched requests through the full stack —
+continuous batching, chunked prefill, paged KV with prefix cache, fairness
+accounting, QoE metrics, token-level state commit for preemption recovery.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen2.5-32b --requests 16
+"""
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.checkpoint import ServingStateLog
+from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b", choices=list(configs.ARCHS))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "vtc", "qoe"])
+    ap.add_argument("--state-log", default="/tmp/repro_serving_state.jsonl")
+    args = ap.parse_args()
+
+    cfg = configs.smoke_config(args.arch)
+    model = build_model(cfg)
+    params, _ = split_params(model.init(jax.random.PRNGKey(0), max_seq=512))
+    engine = LLMEngine(model, params, EngineConfig(
+        block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
+        scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
+                                  prefill_chunk=32, policy=args.policy)))
+    log = ServingStateLog(args.state_log)
+
+    rng = np.random.default_rng(0)
+    system_prompt = list(map(int, rng.integers(2, cfg.vocab_size, size=48)))
+    t0 = time.time()
+    for i in range(args.requests):
+        user_part = list(map(int, rng.integers(
+            2, cfg.vocab_size, size=int(rng.integers(8, 48)))))
+        engine.add_request(Request(
+            request_id=f"req-{i}",
+            prompt=system_prompt + user_part,  # shared prefix -> cache hits
+            user_id=f"user-{i % 3}",
+            sampling=SamplingParams(temperature=0.7, top_k=50,
+                                    max_new_tokens=int(rng.integers(8, 24)))))
+
+    tokens = 0
+    while engine.scheduler.has_work():
+        tokens += engine.step()
+        for seq in engine.seqs.values():
+            if seq.generated:
+                log.commit(seq.request_id, seq.request.prompt, seq.generated)
+    dt = time.time() - t0
+
+    ms = engine.finished
+    gen = sum(m.num_generated for m in ms)
+    print(f"\n=== {args.requests} requests, {gen} tokens in {dt:.1f}s "
+          f"({gen/dt:.1f} tok/s on CPU, {engine.steps} engine steps) ===")
+    print(f"policy={args.policy}")
+    print(f"TTFT   p50={np.median([m.ttft for m in ms])*1e3:.0f}ms "
+          f"p99={np.percentile([m.ttft for m in ms], 99)*1e3:.0f}ms")
+    print(f"TPOT   p50={np.median([m.tpot for m in ms])*1e3:.0f}ms")
+    print(f"QoE    mean={np.mean([m.qoe for m in ms]):.2f}")
+    if engine.prefix_cache:
+        st = engine.prefix_cache.stats
+        print(f"prefix cache: hit_rate={st.hit_rate:.2f} "
+              f"hit_tokens={sum(m.prefix_hit_tokens for m in ms)}")
+    print(f"blocks: peak={engine.bm.stats.peak_used}/{engine.bm.num_blocks} "
+          f"cow={engine.bm.stats.cow_copies}")
+    print(f"fairness gap (VTC tokens): {engine.vtc.fairness_gap():.0f}")
+    print(f"state log: {args.state_log} ({len(log.restore())} recoverable)")
+
+
+if __name__ == "__main__":
+    main()

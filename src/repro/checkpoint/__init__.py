@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.serving_state import ServingStateLog  # noqa: F401

@@ -1,0 +1,53 @@
+"""Flat-npz checkpoints for params/optimizer state.
+
+Arrays are stored under '/'-joined pytree paths. On restore, arrays are placed
+with the caller-provided shardings (device_put per leaf) so a restored model
+lands directly in its pjit layout — the ServerlessLLM-style "load into the
+layout you will serve in" point from survey §V.A.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays/ShapeDtypeStructs)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s) if s is not None else a,
+                            tree, shardings)
+    return tree, step

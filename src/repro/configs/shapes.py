@@ -1,0 +1,31 @@
+"""Assigned input shapes (public pool).
+
+Decode shapes lower ``serve_step`` (one new token against a KV cache of
+``seq_len``), not ``train_step``. ``long_500k`` is restricted to sub-quadratic
+architectures (see ``ModelConfig.is_subquadratic`` and DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown input shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,465 @@
+"""LLMEngine: continuous-batching serving engine over paged KV storage.
+
+Architecture (DESIGN.md §1): the block manager / prefix cache do host-side
+paging *accounting*; physical pages live in per-layer ``PagedStore`` arrays
+(block-indexed, exactly the layout the Pallas paged-attention kernel consumes
+on TPU). Each engine step gathers the scheduled sequences' pages into a dense
+(B, W) cache window, runs the jitted ``model.extend`` (decodes are chunks of
+length 1 — SplitFuse unified batching), then scatters the newly written
+positions back to their pages. On CPU this gather/scatter is numpy memcpy; on
+TPU the same step runs the paged kernel directly on the stores (no gather) —
+the two paths share all scheduling/allocation logic.
+
+Recurrent mixers (Mamba/xLSTM) use fixed-size state slots; whisper cross-KV is
+per-sequence state as well. Models mixing both (Jamba) use both stores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_manager import BlockManager, OutOfBlocks
+from repro.core.kv_quant import QuantConfig, dequantize, quantize
+from repro.core.metrics import RequestMetrics, VTCCounter, finalize_request
+from repro.core.prefix_cache import PrefixCache
+from repro.core.request import Request, SeqState, SeqStatus
+from repro.core.sampling import SamplingParams, sample_token
+from repro.core.scheduler import ChunkWork, Scheduler, SchedulerConfig, StepPlan
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    block_size: int = 16
+    num_blocks: int = 512
+    num_state_slots: int = 32
+    max_model_len: int = 256  # gathered cache window (jit-static)
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    enable_prefix_cache: bool = True
+    host_cache_blocks: int = 0  # AttentionStore host tier (0 = off)
+    kv_quant: Optional[QuantConfig] = None  # quantize pages at rest (KIVI)
+    seed: int = 0
+
+
+def _has_state_mixer(cfg) -> bool:
+    return any(s.mixer in ("mamba", "mlstm", "slstm")
+               for p, _ in cfg.stages for s in p) or cfg.family == "audio"
+
+
+class PagedModelState:
+    """Physical page/state stores matching the model's cache pytree."""
+
+    def __init__(self, model, engine_cfg: EngineConfig):
+        self.model = model
+        self.cfg = engine_cfg
+        B, W = 1, engine_cfg.max_model_len
+        template = jax.eval_shape(lambda: model.init_cache(B, W))
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        paths = jax.tree_util.tree_flatten_with_path(template)[0]
+        self.kinds: List[str] = []
+        self.stores: List[np.ndarray] = []
+        bs = engine_cfg.block_size
+        for (path, leaf) in paths:
+            shape = leaf.shape
+            # stage leaves are (R, B, ...); paged iff the post-batch axis == W
+            if len(shape) >= 3 and shape[1] == B and shape[2] == W:
+                self.kinds.append("paged")
+                self.stores.append(np.zeros(
+                    (shape[0], engine_cfg.num_blocks, bs) + tuple(shape[3:]),
+                    dtype=leaf.dtype))
+            else:
+                self.kinds.append("state")
+                self.stores.append(np.zeros(
+                    (shape[0], engine_cfg.num_state_slots) + tuple(shape[2:]),
+                    dtype=leaf.dtype))
+
+    # ------------------------------------------------------------------
+    def gather(self, tables: np.ndarray, slots: np.ndarray):
+        """tables: (B, nmax) int block ids; slots: (B,) int state slots.
+        Returns the model cache pytree with leaves (R, B, W, ...) / (R, B, ...)."""
+        out = []
+        W = self.cfg.max_model_len
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                g = store[:, tables]  # (R, B, nmax, bs, ...)
+                R, B, nb, bs = g.shape[:4]
+                out.append(jnp.asarray(g.reshape((R, B, nb * bs) + g.shape[4:])[:, :, :W]))
+            else:
+                out.append(jnp.asarray(store[:, slots]))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def scatter(self, new_cache, tables: np.ndarray, slots: np.ndarray,
+                starts: List[int], lengths: List[int],
+                quant: Optional[QuantConfig] = None) -> None:
+        """Write back the positions [starts[b], starts[b]+lengths[b]) per seq."""
+        bs = self.cfg.block_size
+        leaves = jax.tree_util.tree_flatten(new_cache)[0]
+        for kind, store, leaf in zip(self.kinds, self.stores, leaves):
+            arr = np.asarray(leaf)
+            if kind == "paged":
+                for b, (st, ln) in enumerate(zip(starts, lengths)):
+                    if ln <= 0:
+                        continue
+                    pos = np.arange(st, st + ln)
+                    blk = tables[b, pos // bs]
+                    off = pos % bs
+                    payload = arr[:, b, pos]
+                    if quant is not None:
+                        # KIVI quantize-at-rest roundtrip (layout unchanged;
+                        # packed int pages are the Pallas kernel's concern)
+                        axis = "channel" if payload.ndim >= 3 else "token"
+                        codes, scale, zero = quantize(jnp.asarray(payload),
+                                                      quant.bits, axis)
+                        payload = np.asarray(dequantize(codes, scale, zero),
+                                             dtype=arr.dtype)
+                    store[:, blk, off] = payload
+            else:
+                for b, ln in enumerate(lengths):
+                    if ln <= 0:
+                        continue
+                    store[:, slots[b]] = arr[:, b]
+
+    def copy_block(self, src: int, dst: int) -> None:
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                store[:, dst] = store[:, src]
+
+    def block_payload(self, block: int):
+        """Serialize one block's pages across layers (host-tier demotion)."""
+        return [store[:, block].copy() for kind, store in
+                zip(self.kinds, self.stores) if kind == "paged"]
+
+    def restore_block(self, block: int, payload) -> int:
+        i = 0
+        nbytes = 0
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                store[:, block] = payload[i]
+                nbytes += payload[i].nbytes
+                i += 1
+        return nbytes
+
+    def kv_bytes_per_block(self) -> int:
+        return sum(int(np.prod(s.shape[2:])) * s.dtype.itemsize * s.shape[0]
+                   for k, s in zip(self.kinds, self.stores) if k == "paged")
+
+    def state_payload(self, slot: int):
+        return [store[:, slot].copy() for kind, store in
+                zip(self.kinds, self.stores) if kind == "state"]
+
+    def restore_state(self, slot: int, payload) -> int:
+        i = 0
+        nbytes = 0
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "state":
+                store[:, slot] = payload[i]
+                nbytes += payload[i].nbytes
+                i += 1
+        return nbytes
+
+
+class LLMEngine:
+    def __init__(self, model, params, engine_cfg: Optional[EngineConfig] = None):
+        self.model = model
+        self.params = params
+        self.cfg = engine_cfg or EngineConfig()
+        sched_cfg = self.cfg.scheduler
+        if _has_state_mixer(model.cfg):
+            sched_cfg = dataclasses.replace(sched_cfg, exact_chunks=True)
+            # prefix-cache reuse is only sound when the cached blocks fully
+            # determine the sequence state. Recurrent mixers carry state that is
+            # NOT content-addressable per block (and whisper's decoder KV depends
+            # on the per-request audio), so disable reuse for them (DESIGN §4).
+            self.cfg = dataclasses.replace(self.cfg, scheduler=sched_cfg,
+                                           enable_prefix_cache=False)
+        self.vtc = VTCCounter()
+        self.scheduler = Scheduler(sched_cfg, self.vtc)
+        self.bm = BlockManager(self.cfg.num_blocks, self.cfg.block_size,
+                               self.cfg.num_state_slots)
+        self.store = PagedModelState(model, self.cfg)
+        self.prefix_cache = PrefixCache(self.bm,
+                                        host_capacity_blocks=self.cfg.host_cache_blocks) \
+            if self.cfg.enable_prefix_cache else None
+        self.seqs: Dict[str, SeqState] = {}
+        self.finished: List[RequestMetrics] = []
+        self._rng = jax.random.PRNGKey(self.cfg.seed)
+        self._extend_jit = jax.jit(model.extend)
+        self.host_transfer_bytes = 0
+        self.steps = 0
+        self.exact_chunks = sched_cfg.exact_chunks
+        self._step_inflight: Optional[set] = None
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request) -> SeqState:
+        if req.arrival_time == 0.0:
+            req.arrival_time = time.time()
+        seq = SeqState(request=req)
+        self.seqs[req.request_id] = seq
+        self._prefix_lookup(seq)
+        self.scheduler.add(seq)
+        return seq
+
+    def _prefix_lookup(self, seq: SeqState) -> None:
+        """Prefix-cache lookup (survey §III.A). Called at admission and again
+        while the request waits in queue — a burst of same-prefix requests can
+        hit blocks inserted by whichever of them prefilled first."""
+        req = seq.request
+        if self.prefix_cache is not None and len(req.prompt) > self.cfg.block_size:
+            dev_blocks, host_hashes, matched = self.prefix_cache.lookup(req.prompt)
+            matched = min(matched, len(req.prompt) - 1)  # recompute >=1 token for logits
+            usable = matched // self.cfg.block_size * self.cfg.block_size
+            keep = usable // self.cfg.block_size
+            if len(dev_blocks) > keep:
+                self.bm.free(dev_blocks[keep:])  # drop refs the cap excluded
+            dev_blocks = dev_blocks[:keep]
+            seq.block_table.extend(dev_blocks)
+            # host-tier restores: copy payloads into fresh blocks (bytes counted)
+            for h in host_hashes[: max(0, usable // self.cfg.block_size - len(dev_blocks))]:
+                payload = self.prefix_cache.host_payload(h)
+                if payload is None:
+                    break
+                try:
+                    nb = self.bm.allocate(1)[0]
+                except OutOfBlocks:
+                    break
+                self.host_transfer_bytes += self.store.restore_block(nb, payload)
+                seq.block_table.append(nb)
+            seq.num_computed = len(seq.block_table) * self.cfg.block_size
+            seq.prefix_hit_tokens = seq.num_computed
+
+    # ------------------------------------------------------------------
+    def _alloc_for(self, seq: SeqState, target_tokens: int,
+                   protected: Optional[set] = None) -> None:
+        """Grow seq's block table; on pressure, evict prefix-cache blocks then
+        preempt running sequences — but never one in the current batch group
+        (``protected``), whose pages are about to be gathered."""
+        while True:
+            try:
+                self.bm.ensure_capacity(seq.block_table, target_tokens)
+                if seq.state_slot is None and self.store.kinds.count("state"):
+                    seq.state_slot = self.bm.allocate_state_slot()
+                return
+            except OutOfBlocks:
+                if self.prefix_cache is not None and self.prefix_cache.evict(
+                        4, demote_payload_fn=(self.store.block_payload
+                                              if self.cfg.host_cache_blocks else None)):
+                    continue
+                victim = self._pick_victim(protected or {seq.request_id})
+                if victim is None:
+                    raise
+                self._do_preempt(victim)
+
+    def _pick_victim(self, protected: set) -> Optional[SeqState]:
+        cands = [s for s in self.scheduler.running
+                 if s.request_id not in protected and s.block_table]
+        if not cands:
+            return None
+        # preempt the most recently arrived (FCFS-preserving)
+        return max(cands, key=lambda s: s.request.arrival_time)
+
+    def _do_preempt(self, seq: SeqState) -> None:
+        self._free_seq_memory(seq)
+        self.scheduler.preempt(seq)
+
+    def _free_seq_memory(self, seq: SeqState) -> None:
+        if seq.block_table:
+            self.bm.free(seq.block_table)
+            seq.block_table = []
+        if seq.state_slot is not None:
+            self.bm.free_state_slot(seq.state_slot)
+            seq.state_slot = None
+
+    # ------------------------------------------------------------------
+    def _run_group(self, chunks: List[ChunkWork]) -> None:
+        """Run one jitted extend over a group of chunks (uniform C if exact)."""
+        # allocation pass first: a preemption victim must never be a sequence
+        # whose pages this step is about to gather (any group of the plan)
+        inflight = self._step_inflight or {c.seq.request_id for c in chunks}
+        ready: List[ChunkWork] = []
+        for ch in chunks:
+            if ch.seq.status is not SeqStatus.RUNNING:
+                continue  # preempted by an earlier group of this step
+            try:
+                self._alloc_for(ch.seq, ch.start + ch.length, protected=inflight)
+                self._handle_cow(ch.seq, ch)
+                ready.append(ch)
+            except OutOfBlocks:
+                # cannot fit this chunk even after evictions: self-preempt and
+                # let the scheduler retry once memory frees up
+                self._do_preempt(ch.seq)
+        chunks = ready
+        if not chunks:
+            return
+        B = len(chunks)
+        C = max(c.length for c in chunks)
+        W = self.cfg.max_model_len
+        bs = self.cfg.block_size
+        nmax = W // bs
+        tokens = np.zeros((B, C), np.int32)
+        cache_lens = np.zeros((B,), np.int32)
+        tables = np.zeros((B, nmax), np.int64)
+        slots = np.zeros((B,), np.int64)
+        extras: Dict[str, Any] = {}
+        for b, ch in enumerate(chunks):
+            seq = ch.seq
+            toks = seq.all_tokens
+            tokens[b, : ch.length] = toks[ch.start: ch.start + ch.length]
+            cache_lens[b] = ch.start
+            tb = seq.block_table[:nmax]
+            tables[b, : len(tb)] = tb
+            slots[b] = seq.state_slot if seq.state_slot is not None else 0
+            ext = getattr(seq.request, "extras", None)
+            if ext and seq.num_computed == 0 and ch.start == 0:
+                for k, v in ext.items():
+                    extras.setdefault(k, []).append(v)
+        batch_extras = None
+        if extras:
+            batch_extras = {k: jnp.asarray(np.stack(v)) for k, v in extras.items()}
+            if len(next(iter(extras.values()))) != B:
+                batch_extras = None  # mixed first/non-first chunks: unsupported mix
+        cache = self.store.gather(tables, slots)
+        logits, new_cache = self._extend_jit(self.params, jnp.asarray(tokens), cache,
+                                             jnp.asarray(cache_lens),
+                                             batch=batch_extras)
+        self.store.scatter(new_cache, tables, slots,
+                           [c.start for c in chunks], [c.length for c in chunks],
+                           quant=self.cfg.kv_quant)
+        logits_np = np.asarray(logits.astype(jnp.float32))
+        now = time.time()
+        for b, ch in enumerate(chunks):
+            seq = ch.seq
+            seq.num_computed = max(seq.num_computed, ch.start + ch.length)
+            end = ch.start + ch.length
+            # publish completed full prompt blocks immediately so concurrent
+            # same-prefix requests can reuse them (vLLM-style eager insert)
+            if self.prefix_cache is not None and seq.num_computed >= bs:
+                prompt_computed = min(seq.num_computed, seq.prompt_len)
+                nfull = prompt_computed // bs
+                self.prefix_cache.insert(seq.request.prompt[: nfull * bs],
+                                         seq.block_table[:nfull])
+            prompt_overlap = max(0, min(end, seq.prompt_len) - ch.start)
+            if end < seq.total_len:
+                # prefill chunk (or recompute of generated tokens after
+                # preemption): no token emitted
+                self.vtc.charge(seq.request.user_id, input_tokens=prompt_overlap)
+                continue
+            self.vtc.charge(seq.request.user_id, input_tokens=prompt_overlap,
+                            output_tokens=1)
+            last = logits_np[b, ch.length - 1]
+            self._rng, sub = jax.random.split(self._rng)
+            tok = int(sample_token(sub, jnp.asarray(last[None]),
+                                   seq.request.sampling)[0])
+            if seq.first_token_time is None:
+                seq.first_token_time = now
+            seq.token_times.append(now)
+            seq.generated.append(tok)
+            sp = seq.request.sampling
+            stop = (sp.stop_token is not None and tok == sp.stop_token) or \
+                   len(seq.generated) >= sp.max_new_tokens or \
+                   seq.total_len >= self.cfg.max_model_len - 1
+            if stop:
+                self._finish(seq, now)
+
+    def _handle_cow(self, seq: SeqState, ch: ChunkWork) -> None:
+        """Copy-on-write for shared blocks the chunk will write into."""
+        bs = self.cfg.block_size
+        first_blk = ch.start // bs
+        last_blk = (ch.start + ch.length - 1) // bs
+        for i in range(first_blk, min(last_blk + 1, len(seq.block_table))):
+            blk = seq.block_table[i]
+            new = self.bm.copy_on_write(blk)
+            if new is not None:
+                self.store.copy_block(blk, new)
+                seq.block_table[i] = new
+
+    def _finish(self, seq: SeqState, now: float) -> None:
+        seq.finish_time = now
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(seq.all_tokens, seq.block_table)
+        self.scheduler.finish(seq)
+        self._free_seq_memory(seq)
+        self.finished.append(finalize_request(seq))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration; returns number of tokens processed."""
+        # late prefix lookups: queued requests may hit blocks a sibling request
+        # inserted after they were admitted (burst of same-system-prompt reqs)
+        if self.prefix_cache is not None:
+            for seq in list(self.scheduler.waiting)[:8]:
+                if seq.num_computed == 0 and not seq.generated and \
+                        not seq.block_table:
+                    self._prefix_lookup(seq)
+        plan = self.scheduler.plan(time.time())
+        if not plan.chunks:
+            return 0
+        self.steps += 1
+        self._step_inflight = {c.seq.request_id for c in plan.chunks}
+        try:
+            if self.exact_chunks:
+                by_len: Dict[int, List[ChunkWork]] = {}
+                for c in plan.chunks:
+                    by_len.setdefault(c.length, []).append(c)
+                for _, group in sorted(by_len.items()):
+                    self._run_group(group)
+            else:
+                self._run_group(plan.chunks)
+        finally:
+            self._step_inflight = None
+        return plan.num_tokens
+
+    def run(self, max_steps: int = 10_000) -> List[RequestMetrics]:
+        for _ in range(max_steps):
+            if not self.scheduler.has_work():
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    # KV migration (disaggregated prefill/decode, survey §IV.B; also the
+    # Llumnix live-migration primitive from §V.A)
+    # ------------------------------------------------------------------
+    def export_seq(self, request_id: str) -> dict:
+        """Extract a sequence's tokens + pages + state and release it locally."""
+        seq = self.seqs.pop(request_id)
+        payload = {
+            "request": seq.request,
+            "generated": list(seq.generated),
+            "num_computed": seq.num_computed,
+            "prefix_hit_tokens": seq.prefix_hit_tokens,
+            "first_token_time": seq.first_token_time,
+            "token_times": list(seq.token_times),
+            "blocks": [self.store.block_payload(b) for b in seq.block_table],
+            "state": (self.store.state_payload(seq.state_slot)
+                      if seq.state_slot is not None else None),
+        }
+        if seq in self.scheduler.running:
+            self.scheduler.running.remove(seq)
+        self._free_seq_memory(seq)
+        return payload
+
+    def import_seq(self, payload: dict) -> SeqState:
+        """Admit a migrated sequence; returns transferred bytes via .last_import_bytes."""
+        req = payload["request"]
+        seq = SeqState(request=req, status=SeqStatus.RUNNING,
+                       generated=list(payload["generated"]),
+                       num_computed=payload["num_computed"],
+                       prefix_hit_tokens=payload["prefix_hit_tokens"],
+                       first_token_time=payload["first_token_time"],
+                       token_times=list(payload["token_times"]))
+        nbytes = 0
+        blocks = self.bm.allocate(len(payload["blocks"]))
+        for b, page in zip(blocks, payload["blocks"]):
+            nbytes += self.store.restore_block(b, page)
+        seq.block_table = blocks
+        if payload["state"] is not None:
+            seq.state_slot = self.bm.allocate_state_slot()
+            nbytes += self.store.restore_state(seq.state_slot, payload["state"])
+        self.seqs[req.request_id] = seq
+        self.scheduler.running.append(seq)
+        self.last_import_bytes = nbytes
+        return seq

@@ -1,0 +1,99 @@
+"""Multi-instance serving fleet with live request migration (survey §V.A,
+Llumnix): requests are routed to the least-loaded engine instance at admission
+and *rescheduled across instances at runtime* — the engine's export/import KV
+migration (the same primitive the disaggregated server uses) implements
+Llumnix's live migration, so rebalancing never recomputes KV.
+
+Policies unified by one mechanism (as in the paper): load balancing,
+de-fragmentation (drain a mostly-idle instance), and priority make-room.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.engine import EngineConfig, LLMEngine
+from repro.core.metrics import RequestMetrics
+from repro.core.request import Request, SeqStatus
+
+
+@dataclasses.dataclass
+class FleetStats:
+    migrations: int = 0
+    migrated_bytes: int = 0
+
+
+class ServingFleet:
+    def __init__(self, model, params, *, instances: int,
+                 engine_cfg: EngineConfig, rebalance_threshold: float = 0.25):
+        self.engines: List[LLMEngine] = [
+            LLMEngine(model, params, engine_cfg) for _ in range(instances)]
+        self.threshold = rebalance_threshold
+        self.stats = FleetStats()
+
+    # ------------------------------------------------------------------
+    def _load(self, eng: LLMEngine) -> float:
+        """Instance load = fraction of KV blocks in use (Llumnix's memory-
+        pressure signal; running seqs would also work)."""
+        return eng.bm.used_blocks / eng.bm.num_blocks
+
+    def least_loaded(self) -> LLMEngine:
+        return min(self.engines, key=self._load)
+
+    def add_request(self, req: Request):
+        return self.least_loaded().add_request(req)
+
+    # ------------------------------------------------------------------
+    def rebalance(self) -> int:
+        """Migrate decoding sequences from the most- to the least-loaded
+        instance while their load gap exceeds the threshold. Returns the
+        number of migrations performed."""
+        moved = 0
+        for _ in range(8):  # bounded work per call
+            src = max(self.engines, key=self._load)
+            dst = min(self.engines, key=self._load)
+            if src is dst or self._load(src) - self._load(dst) < self.threshold:
+                break
+            # migrate the most recently arrived decoding sequence (cheapest
+            # to move: smallest KV) that is not mid-prefill
+            cands = [s for s in src.scheduler.running
+                     if not s.in_prefill and s.status is SeqStatus.RUNNING]
+            if not cands:
+                break
+            victim = max(cands, key=lambda s: s.request.arrival_time)
+            payload = src.export_seq(victim.request_id)
+            dst.import_seq(payload)
+            self.stats.migrations += 1
+            self.stats.migrated_bytes += dst.last_import_bytes
+            moved += 1
+        return moved
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        for eng in self.engines:
+            eng.step()
+        self.rebalance()
+
+    def has_work(self) -> bool:
+        return any(e.scheduler.has_work() for e in self.engines)
+
+    def run(self, max_steps: int = 10_000) -> List[RequestMetrics]:
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            self.step()
+        out: List[RequestMetrics] = []
+        for e in self.engines:
+            out.extend(e.finished)
+        return out
+
+    @property
+    def seqs(self):
+        merged = {}
+        for e in self.engines:
+            merged.update(e.seqs)
+        return merged
+
+    def load_gap(self) -> float:
+        loads = [self._load(e) for e in self.engines]
+        return max(loads) - min(loads)

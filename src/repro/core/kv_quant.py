@@ -1,0 +1,102 @@
+"""KIVI-style asymmetric KV-cache quantization (survey §III.C, arXiv:2402.02750).
+
+KIVI's observation: key-cache entries have outlier *channels* (so quantize K
+per-channel: group along the channel axis), while value-cache entries are
+token-local (quantize V per-token). Both use asymmetric (min/max zero-point)
+uniform quantization at 2-8 bits. GEAR-style residual correction is available
+as an option: a rank-r approximation of the quantization error is kept in
+fp16, recovering most of the loss at small overhead.
+
+These are pure-jnp reference transforms; the Pallas pack/unpack kernel in
+kernels/kv_quant performs the same math fused with the page layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    key_axis: str = "channel"  # KIVI: keys per-channel
+    value_axis: str = "token"  # KIVI: values per-token
+    residual_rank: int = 0  # GEAR-style low-rank error correction
+
+
+def _axis_reduce(x, axis_kind: str, token_axis: int, channel_axis: int):
+    # reduce over every axis EXCEPT the grouping axis
+    keep = token_axis if axis_kind == "token" else channel_axis
+    axes = tuple(i for i in range(x.ndim) if i != keep)
+    return axes
+
+
+def quantize(x: jnp.ndarray, bits: int, axis_kind: str, *, token_axis: int = -2,
+             channel_axis: int = -1) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (..., tokens, channels) -> (codes uint8, scale, zero).
+
+    Asymmetric uniform quantization; grouping per-token or per-channel.
+    """
+    token_axis %= x.ndim
+    channel_axis %= x.ndim
+    axes = _axis_reduce(x, axis_kind, token_axis, channel_axis)
+    xf = x.astype(jnp.float32)
+    lo = xf.min(axis=axes, keepdims=True)
+    hi = xf.max(axis=axes, keepdims=True)
+    qmax = float(2 ** bits - 1)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round((xf - lo) / scale), 0, qmax).astype(jnp.uint8)
+    return codes, scale, lo
+
+
+def dequantize(codes, scale, zero) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def quantize_kv(k: jnp.ndarray, v: jnp.ndarray, qc: QuantConfig):
+    """KIVI: K per-channel, V per-token. k/v: (..., tokens, channels)."""
+    kq = quantize(k, qc.bits, qc.key_axis)
+    vq = quantize(v, qc.bits, qc.value_axis)
+    res = None
+    if qc.residual_rank:
+        err = k.astype(jnp.float32) - dequantize(*kq)
+        # rank-r via SVD over the trailing (tokens, channels) matrix
+        shape = err.shape
+        mat = err.reshape(-1, shape[-2], shape[-1])
+        u, s, vt = jnp.linalg.svd(mat, full_matrices=False)
+        r = qc.residual_rank
+        res = (u[..., :, :r] * s[..., None, :r], vt[..., :r, :])
+    return kq, vq, res
+
+
+def dequantize_kv(kq, vq, res=None):
+    k = dequantize(*kq)
+    v = dequantize(*vq)
+    if res is not None:
+        us, vt = res
+        k = k + (us @ vt).reshape(k.shape)
+    return k, v
+
+
+def quant_error(x, bits: int, axis_kind: str) -> float:
+    """Relative L2 error of a quantization roundtrip (benchmark helper)."""
+    codes, scale, zero = quantize(jnp.asarray(x), bits, axis_kind)
+    xhat = dequantize(codes, scale, zero)
+    num = float(jnp.linalg.norm((xhat - x).astype(jnp.float32)))
+    den = float(jnp.linalg.norm(jnp.asarray(x, jnp.float32))) or 1.0
+    return num / den
+
+
+def compression_ratio(bits: int, residual_rank: int, tokens: int, channels: int,
+                      base_bits: int = 16) -> float:
+    base = tokens * channels * base_bits
+    quant = tokens * channels * bits
+    # scales+zeros: one f16 pair per group
+    quant += 2 * 16 * max(tokens, channels)
+    quant += residual_rank * (tokens + channels) * 16
+    return base / quant

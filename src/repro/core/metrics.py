@@ -1,0 +1,78 @@
+"""Serving metrics: TTFT / TPOT / throughput, Andes QoE, VTC fairness counters."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.request import SeqState
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    request_id: str
+    ttft: float
+    tpot: float  # mean time per output token after the first
+    e2e: float
+    num_prompt: int
+    num_generated: int
+    prefix_hit_tokens: int
+    preemptions: int
+    qoe: float
+
+
+def qoe_score(token_times: List[float], arrival: float, *, expected_ttft: float,
+              expected_tds: float) -> float:
+    """Andes-style QoE: fraction of tokens delivered no later than the expected
+    token-delivery timeline (TDT). expected_tds = tokens/sec a user consumes."""
+    if not token_times:
+        return 0.0
+    ok = 0
+    for i, t in enumerate(token_times):
+        expected = arrival + expected_ttft + i / expected_tds
+        if t <= expected + 1e-9:
+            ok += 1
+    return ok / len(token_times)
+
+
+def finalize_request(seq: SeqState, *, expected_ttft: float = 1.0,
+                     expected_tds: float = 10.0) -> RequestMetrics:
+    arrival = seq.request.arrival_time
+    ttft = (seq.first_token_time - arrival) if seq.first_token_time else 0.0
+    n = len(seq.generated)
+    if n > 1 and seq.finish_time and seq.first_token_time:
+        tpot = (seq.finish_time - seq.first_token_time) / (n - 1)
+    else:
+        tpot = 0.0
+    e2e = (seq.finish_time - arrival) if seq.finish_time else 0.0
+    return RequestMetrics(
+        request_id=seq.request_id, ttft=ttft, tpot=tpot, e2e=e2e,
+        num_prompt=seq.prompt_len, num_generated=n,
+        prefix_hit_tokens=seq.prefix_hit_tokens, preemptions=seq.preemptions,
+        qoe=qoe_score(seq.token_times, arrival, expected_ttft=expected_ttft,
+                      expected_tds=expected_tds))
+
+
+class VTCCounter:
+    """Virtual Token Counter (fairness in serving LLMs, survey §VI.C).
+
+    Tracks weighted service per user; the scheduler prioritizes the least-served
+    user. Input and output tokens cost differently (output ~2x input).
+    """
+
+    def __init__(self, input_cost: float = 1.0, output_cost: float = 2.0):
+        self.input_cost = input_cost
+        self.output_cost = output_cost
+        self.counters: Dict[str, float] = {}
+
+    def charge(self, user: str, *, input_tokens: int = 0, output_tokens: int = 0):
+        self.counters[user] = self.counters.get(user, 0.0) + \
+            self.input_cost * input_tokens + self.output_cost * output_tokens
+
+    def service(self, user: str) -> float:
+        return self.counters.get(user, 0.0)
+
+    def fairness_gap(self) -> float:
+        if not self.counters:
+            return 0.0
+        vals = list(self.counters.values())
+        return max(vals) - min(vals)

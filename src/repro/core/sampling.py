@@ -1,0 +1,27 @@
+"""Token sampling (greedy / temperature / top-k) — pure-jnp, jit-safe."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0  # 0 => no top-k filter
+    max_new_tokens: int = 64
+    stop_token: Optional[int] = None
+
+
+def sample_token(rng, logits, params: SamplingParams):
+    """logits: (B, V) -> (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

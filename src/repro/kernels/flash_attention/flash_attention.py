@@ -1,0 +1,103 @@
+"""Pallas TPU causal flash-attention prefill kernel.
+
+Blockwise online-softmax over (q_block, kv_block) VMEM tiles. GQA is handled by
+the k/v BlockSpec index maps (query head h reads kv head h // G) so no repeated
+KV is ever materialized in HBM. Causal tiles strictly above the diagonal are
+skipped with ``pl.when`` — the tile never touches the MXU (the compute-roofline
+optimization; the DMA still runs, which on real hardware is hidden by the
+pipeline's double buffering).
+
+Block sizes default to 128x128 (MXU-aligned); swept in tests via interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            q_block: int, kv_block: int, scale: float, window: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    # tile is live iff some (i >= j) pair exists: k_start <= q_end; for windowed
+    # attention additionally k_end > q_start - window
+    live = k_start <= q_start + q_block - 1
+    if window:
+        live &= (k_start + kv_block - 1) > (q_start - window)
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)  # (qb, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (kb, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ipos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        jpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = jpos <= ipos
+        if window:
+            mask &= jpos > ipos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, scale: float, window: int = 0,
+                  q_block: int = 128, kv_block: int = 128,
+                  interpret: bool = False):
+    """q: (B, H, S, D); k/v: (B, KV, S, D) -> (B, H, S, D). S % blocks == 0."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qb = min(q_block, S)
+    kb = min(kv_block, S)
+    assert S % qb == 0 and S % kb == 0, (S, qb, kb)
+    grid = (B, H, S // qb, S // kb)
+
+    kernel = functools.partial(_kernel, q_block=qb, kv_block=kb, scale=scale,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

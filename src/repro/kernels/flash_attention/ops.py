@@ -1,0 +1,22 @@
+"""Jit'd entry point for the flash prefill kernel with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_prefill
+from repro.kernels.flash_attention.ref import flash_prefill_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "impl",
+                                             "q_block", "kv_block"))
+def flash_prefill_attention(q, k, v, *, scale: float, window: int = 0,
+                            impl: str = "auto", q_block: int = 128,
+                            kv_block: int = 128):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_prefill_ref(q, k, v, scale=scale, window=window)
+    return flash_prefill(q, k, v, scale=scale, window=window, q_block=q_block,
+                         kv_block=kv_block, interpret=(impl == "interpret"))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the causal flash prefill kernel (GQA-aware)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, *, scale, window: int = 0):
+    """q: (B, H, S, D); k/v: (B, KV, S, D) -> (B, H, S, D). Causal; optional
+    sliding window (window=0 -> full causal)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qr = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qr, k.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    if window:
+        mask &= j > i - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)

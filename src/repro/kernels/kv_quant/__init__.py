@@ -1,0 +1,1 @@
+from repro.kernels.kv_quant.ops import dequantize_kv_pages, quantize_kv_pages  # noqa: F401

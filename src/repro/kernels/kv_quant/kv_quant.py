@@ -1,0 +1,75 @@
+"""Pallas kernel: per-page asymmetric KV quantization (KIVI, survey §III.C).
+
+One grid step processes one KV page resident in VMEM: computes per-channel
+(keys) or per-token (values) min/max, writes uint8 codes + f32 scale/zero.
+Fusing the stats + round into the page write path means quantize-at-rest costs
+one extra VMEM pass, not an HBM round-trip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits: int, axis: str):
+    x = x_ref[0].astype(jnp.float32)  # (P, C)
+    red = 0 if axis == "channel" else 1
+    lo = jnp.min(x, axis=red, keepdims=True)
+    hi = jnp.max(x, axis=red, keepdims=True)
+    qmax = float(2 ** bits - 1)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes_ref[0] = jnp.clip(jnp.round((x - lo) / scale), 0, qmax).astype(jnp.uint8)
+    scale_ref[0] = scale
+    zero_ref[0] = lo
+
+
+def quantize_pages(pages, *, bits: int = 8, axis: str = "channel",
+                   interpret: bool = False):
+    """pages: (NP, P, C) -> (codes (NP,P,C) uint8, scale, zero)."""
+    NP, P, C = pages.shape
+    s_shape = (NP, 1, C) if axis == "channel" else (NP, P, 1)
+    sP, sC = (1, C) if axis == "channel" else (P, 1)
+    kernel = functools.partial(_kernel, bits=bits, axis=axis)
+    return pl.pallas_call(
+        kernel,
+        grid=(NP,),
+        in_specs=[pl.BlockSpec((1, P, C), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, P, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sP, sC), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sP, sC), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NP, P, C), jnp.uint8),
+            jax.ShapeDtypeStruct(s_shape, jnp.float32),
+            jax.ShapeDtypeStruct(s_shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages)
+
+
+def _dekernel(codes_ref, scale_ref, zero_ref, x_ref):
+    x_ref[0] = (codes_ref[0].astype(jnp.float32) * scale_ref[0]
+                + zero_ref[0]).astype(x_ref.dtype)
+
+
+def dequantize_pages(codes, scale, zero, *, out_dtype=jnp.float32,
+                     interpret: bool = False):
+    NP, P, C = codes.shape
+    sP, sC = scale.shape[1:]
+    return pl.pallas_call(
+        _dekernel,
+        grid=(NP,),
+        in_specs=[
+            pl.BlockSpec((1, P, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sP, sC), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, sP, sC), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, P, C), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((NP, P, C), out_dtype),
+        interpret=interpret,
+    )(codes, scale, zero)

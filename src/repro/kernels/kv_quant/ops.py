@@ -1,0 +1,29 @@
+"""Jit'd entry points for paged KV quantization."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.kv_quant.kv_quant import dequantize_pages, quantize_pages
+from repro.kernels.kv_quant.ref import dequantize_pages_ref, quantize_pages_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis", "impl"))
+def quantize_kv_pages(pages, *, bits: int = 8, axis: str = "channel",
+                      impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return quantize_pages_ref(pages, bits=bits, axis=axis)
+    return quantize_pages(pages, bits=bits, axis=axis,
+                          interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def dequantize_kv_pages(codes, scale, zero, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return dequantize_pages_ref(codes, scale, zero)
+    return dequantize_pages(codes, scale, zero, interpret=(impl == "interpret"))

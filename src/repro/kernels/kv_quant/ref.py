@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for paged KIVI quantization (per-page group quant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_pages_ref(pages, *, bits: int, axis: str):
+    """pages: (NP, P, C). axis: 'channel' (keys) or 'token' (values).
+    Returns (codes uint8 (NP,P,C), scale, zero) with group stats per page."""
+    x = pages.astype(jnp.float32)
+    red_axis = 1 if axis == "channel" else 2  # reduce over the other dim
+    lo = x.min(axis=red_axis, keepdims=True)
+    hi = x.max(axis=red_axis, keepdims=True)
+    qmax = float(2 ** bits - 1)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0, qmax).astype(jnp.uint8)
+    return codes, scale, lo
+
+
+def dequantize_pages_ref(codes, scale, zero):
+    return codes.astype(jnp.float32) * scale + zero

@@ -1,0 +1,23 @@
+"""Jit'd entry point for paged decode attention with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           scale: float, impl: str = "auto"):
+    """impl: 'pallas' (TPU), 'interpret' (Pallas-on-CPU validation), 'ref'."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale)
+    return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                           scale=scale, interpret=(impl == "interpret"))

@@ -1,0 +1,103 @@
+"""Pallas TPU paged decode-attention kernel (survey §III.A, TPU adaptation).
+
+GPU PagedAttention chases per-page pointers inside the kernel; TPUs cannot.
+Instead the block table is a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``): the grid's page axis indexes the table, and
+the BlockSpec index_map turns each entry into the HBM->VMEM DMA source for that
+page — the Pallas pipeline double-buffers these DMAs across grid steps for free
+(this is FlashDecoding++'s "double buffering to hide flat-GEMM latency" on TPU,
+by construction — DESIGN.md §3).
+
+Grid: (B, KV, NP) with NP innermost so the online-softmax scratch carries over
+pages of one (sequence, kv-head) pair. Page size should be a multiple of 128
+lanes on real hardware; correctness is validated in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables_ref, lengths_ref,  # scalar prefetch
+            q_ref, k_ref, v_ref,  # inputs
+            o_ref,  # output
+            m_ref, l_ref, acc_ref,  # VMEM scratch
+            *, page_size: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_pages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (P, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (P, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, P)
+    length = lengths_ref[b]
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    valid = pos < length  # (1, P)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    pr = jnp.exp(s - m_new)
+    pr = jnp.where(valid, pr, 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(pr, axis=1, keepdims=True)
+    acc_new = acc_ref[...] * alpha + jax.lax.dot_general(
+        pr, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(p == np_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale: float, interpret: bool = False):
+    """q: (B, KV, G, D); k_pages/v_pages: (KV, NB, P, D);
+    block_tables: (B, NP) int32; lengths: (B,) -> (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    P = k_pages.shape[2]
+    NP = block_tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, P, D), lambda b, kv, p, bt, ln: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, P, D), lambda b, kv, p, bt, ln: (kv, bt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, page_size=P, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

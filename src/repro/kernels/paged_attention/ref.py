@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Semantics: one query token per sequence attends over a paged KV cache.
+``lengths[b]`` counts valid tokens (the page contents beyond it are garbage and
+must not influence the output). Pages are gathered by ``block_tables``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, scale):
+    """q: (B, KV, G, D); k_pages/v_pages: (KV, NB, P, D);
+    block_tables: (B, NP) int32; lengths: (B,) int32 -> (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    P = k_pages.shape[2]
+    NP = block_tables.shape[1]
+    # gather: (B, KV, NP, P, D) -> (B, KV, S, D)
+    k = jnp.swapaxes(k_pages[:, block_tables], 0, 1).reshape(B, KV, NP * P, D)
+    v = jnp.swapaxes(v_pages[:, block_tables], 0, 1).reshape(B, KV, NP * P, D)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(NP * P)[None, :]
+    valid = pos < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bksd->bkgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh; record memory_analysis / cost_analysis / collective bytes.
+
+MUST be run as its own process (device count is locked at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline
+report (launch/roofline.py).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"(\w+\[[\d,]*\])?\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum collective payload bytes from post-SPMD HLO, scaling ops inside while
+    bodies by their (layer-loop) trip count when derivable.
+
+    Heuristic: computation blocks whose name contains 'while' multiply their
+    collectives by the trip count parsed from an enclosing constant comparison
+    when available, else by 1 (logged). Layer-stacked scans dominate in this
+    framework, so we additionally accept an explicit multiplier map.
+    """
+    per_kind = {}
+    lines = hlo_text.splitlines()
+    current_comp = ""
+    # first pass: find while trip counts: look for 'trip_count="N"' annotations
+    default_mult = 1
+    comp_mult = {}
+    for ln in lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", ln)
+        if ln.startswith("ENTRY") or (m and ("{" in ln or ln.rstrip().endswith("{"))):
+            current_comp = m.group(1) if m else "entry"
+        tc = re.search(r'trip_count="?(\d+)', ln)
+        if tc and current_comp:
+            comp_mult[current_comp] = int(tc.group(1))
+    current_comp = ""
+    for ln in lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", ln)
+        if ln.startswith("ENTRY") or (m and ("{" in ln or ln.rstrip().endswith("{"))):
+            current_comp = m.group(1) if m else "entry"
+        cm = COLLECTIVE_RE.search(ln)
+        if not cm or cm.group(3) == "-start" and "done" in ln:
+            if not cm:
+                continue
+        kind = cm.group(2)
+        if "-done" in ln:
+            continue  # count the -start only
+        sm = SHAPE_RE.search(ln.strip())
+        if not sm:
+            continue
+        nbytes = _shape_bytes(sm.group(1), sm.group(2))
+        mult = comp_mult.get(current_comp, default_mult)
+        per_kind.setdefault(kind, 0)
+        per_kind[kind] += nbytes * mult
+    return per_kind
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+            rules_overrides=None, tag: str = "", options=None,
+            mesh_override=None) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": "full-attention arch (DESIGN §4)"}
+    if mesh_override is not None:
+        mesh = mesh_override
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "mesh_shape": dict(mesh.shape), "tag": tag}
+    try:
+        with mesh:
+            lowerable = build_step(cfg, shape, mesh, rules_overrides, options)
+            lowered = lowerable.lower()
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = parse_collectives(hlo)
+            from repro.launch.hlo_cost import analyze_hlo
+            la = analyze_hlo(hlo)  # loop-aware: scan bodies x trip_count
+            result.update({
+                "status": "ok",
+                "lower_s": round(t_lower - t0, 2),
+                "compile_s": round(t_compile - t_lower, 2),
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+                "flops_loopaware": la.flops,
+                "eltwise_loopaware": la.eltwise,
+                "bytes_loopaware": la.bytes,
+                "transcendentals_loopaware": la.transcendentals,
+                "collectives_loopaware": la.collectives,
+                "unknown_loops": la.unknown_loops,
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                    "generated_code_bytes": getattr(
+                        mem, "generated_code_size_in_bytes", 0),
+                },
+                "collective_bytes": coll,
+                "hlo_collective_ops": sum(
+                    hlo.count(k) for k in ("all-reduce(", "all-gather(",
+                                           "reduce-scatter(", "all-to-all(",
+                                           "collective-permute(")),
+            })
+    except Exception as e:
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--opts", default="",
+                    help="comma-separated rules options, e.g. sharded_moe,cp_decode")
+    args = ap.parse_args()
+    options = {k: True for k in args.opts.split(",") if k} or None
+
+    archs = list(configs.ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                r = run_one(arch, shape, mesh_kind, args.out, tag=args.tag,
+                            options=options)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    gb = (r["memory"]["argument_bytes"] +
+                          r["memory"]["temp_bytes"]) / 2**30
+                    extra = (f"flops={r['flops']:.3g} mem/dev={gb:.2f}GiB "
+                             f"lower={r['lower_s']}s compile={r['compile_s']}s")
+                elif status == "error":
+                    extra = r["error"][:200]
+                else:
+                    extra = r.get("reason", "")
+                print(f"[{status:7s}] {arch:26s} {shape:12s} {mesh_kind:6s} {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders (TPU v5e target).
+
+Functions, not module-level constants: importing this module never touches jax
+device state (device count is locked at first jax init — dryrun.py must set
+XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips (pod axis over DCN/ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for unit tests (uses however many host devices exist)."""
+    axes = ("data", "model")
+    return jax.make_mesh((n_data, n_model), axes,
+                         axis_types=(AxisType.Auto,) * 2)

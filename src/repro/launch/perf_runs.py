@@ -1,0 +1,92 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: re-lowers the three selected (arch x shape) pairs
+with tagged optimization variants; artifacts land next to the baselines so
+``roofline.py`` prints before/after rows (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.perf_runs [--only pair1|pair2|pair3]
+"""
+
+import argparse
+
+import jax
+from jax.sharding import AxisType
+
+from repro.launch.dryrun import ARTIFACT_DIR, run_one
+
+
+def serving_mesh(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    runs = []
+    # ---- pair 1: deepseek-v3-671b x train_4k (MoE EP + CE gather) ----------
+    runs += [
+        ("pair1", dict(arch="deepseek-v3-671b", shape_name="train_4k",
+                       mesh_kind="single", tag="shardedmoe",
+                       options={"sharded_moe": True})),
+        ("pair1", dict(arch="deepseek-v3-671b", shape_name="train_4k",
+                       mesh_kind="single", tag="onehotce",
+                       options={"onehot_ce": True})),
+        ("pair1", dict(arch="deepseek-v3-671b", shape_name="train_4k",
+                       mesh_kind="single", tag="shardedmoe+onehotce",
+                       options={"sharded_moe": True, "onehot_ce": True})),
+    ]
+    # ---- pair 2: qwen2.5-32b x decode_32k (serving-mesh reshape) -----------
+    runs += [
+        ("pair2", dict(arch="qwen2.5-32b", shape_name="decode_32k",
+                       mesh_kind="single", tag="mesh32x8",
+                       mesh_override=serving_mesh((32, 8), ("data", "model")))),
+        ("pair2", dict(arch="qwen2.5-32b", shape_name="decode_32k",
+                       mesh_kind="single", tag="mesh64x4",
+                       mesh_override=serving_mesh((64, 4), ("data", "model")))),
+    ]
+    # ---- pair 3: llama4-scout x long_500k (context-parallel decode) --------
+    runs += [
+        ("pair3", dict(arch="llama4-scout-17b-a16e", shape_name="long_500k",
+                       mesh_kind="single", tag="cpdecode",
+                       options={"cp_decode": True})),
+    ]
+    # ---- pair 5 (bonus): serve-time expert parallelism over the full mesh --
+    # deepseek-v3 weights (671B) cannot fit 256 chips with experts sharded only
+    # over model=16 (replicated across data). At serve time the experts can
+    # shard over data x model = 256 ranks (256 experts / 256 = 1 per chip).
+    runs += [
+        ("pair5", dict(arch="deepseek-v3-671b", shape_name="decode_32k",
+                       mesh_kind="single", tag="ep256",
+                       rules_overrides={"experts": ("data", "model")})),
+    ]
+    # ---- pair 4 (bonus): recurrent time-scan sqrt-remat --------------------
+    # baselines were captured with plain lax.scan over time (carry saved every
+    # step -> 1383 GiB/dev for xlstm train_4k); chunked_scan is now the model
+    # default, so re-lowering tags the "after".
+    runs += [
+        ("pair4", dict(arch="xlstm-1.3b", shape_name="train_4k",
+                       mesh_kind="single", tag="timeremat")),
+        ("pair4", dict(arch="jamba-v0.1-52b", shape_name="train_4k",
+                       mesh_kind="single", tag="timeremat")),
+    ]
+
+    for pair, kw in runs:
+        if args.only and args.only != pair:
+            continue
+        r = run_one(out_dir=args.out, **kw)
+        extra = r.get("error", "")[:200] if r["status"] == "error" else (
+            f"flops={r.get('flops_loopaware', 0):.3g} "
+            f"coll={sum(r.get('collectives_loopaware', {}).values()):.3g} "
+            f"mem/dev={(r['memory']['argument_bytes'] + r['memory']['temp_bytes'])/2**30:.1f}GiB"
+            if r["status"] == "ok" else "")
+        print(f"[{r['status']:7s}] {kw['arch']} {kw['shape_name']} "
+              f"tag={kw['tag']} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per
+ICI link. ``cost_analysis()`` of the partitioned module reports *per-device*
+FLOPs / bytes; collective bytes are parsed per-device from the post-SPMD HLO.
+
+    compute term    = flops_per_dev / PEAK_FLOPS
+    memory term     = bytes_accessed_per_dev / HBM_BW
+    collective term = collective_bytes_per_dev / (ICI_LINKS_USED * LINK_BW)
+
+MODEL_FLOPS (analytic useful compute): 6*N*D for training, 2*N*D per forward
+token (N = active params for MoE). The ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/dispatch overhead and redundant compute.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from repro import configs
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12
+VPU_FLOPS = 19.7e12  # elementwise/VPU peak, assumed MXU/10 (documented estimate)
+HBM_BW = 819e9
+LINK_BW = 50e9
+ICI_LINKS_USED = 2  # one bidirectional ring per sharded mesh axis (data, model)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts
+# ---------------------------------------------------------------------------
+
+def _mixer_params(cfg: ModelConfig, mixer: str) -> float:
+    d = cfg.d_model
+    if mixer == "attn":
+        n = d * cfg.num_heads * cfg.head_dim + 2 * d * cfg.kv_dim + \
+            cfg.num_heads * cfg.head_dim * d
+        return n
+    if mixer == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        n = 0
+        if cfg.q_lora_rank:
+            n += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk
+        else:
+            n += d * cfg.num_heads * qk
+        n += d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+        n += cfg.kv_lora_rank * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+        n += cfg.num_heads * cfg.v_head_dim * d
+        return n
+    if mixer == "mamba":
+        di = cfg.ssm_expand * d
+        dr = max(1, math.ceil(d / 16))
+        N = cfg.ssm_d_state
+        return d * 2 * di + cfg.ssm_d_conv * di + di * (dr + 2 * N) + dr * di + \
+            di * N + di + di * d
+    if mixer == "mlstm":
+        di = int(cfg.mlstm_proj_factor * d)
+        return d * 2 * di + 4 * di + 3 * di * di + di * 2 * cfg.num_heads + di * d
+    if mixer == "slstm":
+        dh = d // cfg.num_heads
+        df = int(cfg.slstm_proj_factor * d)
+        return d * 4 * d + cfg.num_heads * dh * 4 * dh + d * 2 * df + df * d
+    raise ValueError(mixer)
+
+
+def _ff_params(cfg: ModelConfig, ff: str, active: bool) -> float:
+    d = cfg.d_model
+    from repro.models.common import is_glu
+    glu = 2 if is_glu(cfg.activation) else 1
+    if ff == "none":
+        return 0
+    if ff == "mlp":
+        return d * cfg.d_ff * glu + cfg.d_ff * d
+    # moe
+    expert = d * cfg.moe_d_ff * glu + cfg.moe_d_ff * d
+    n = d * cfg.num_experts  # router
+    n += (cfg.top_k if active else cfg.num_experts) * expert
+    n += cfg.num_shared_experts * expert
+    return n
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    total = active = cfg.vocab_size * cfg.d_model  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+        active += cfg.d_model * cfg.vocab_size
+    for spec in cfg.layer_specs():
+        m = _mixer_params(cfg, spec.mixer)
+        total += m + _ff_params(cfg, spec.ff, active=False)
+        active += m + _ff_params(cfg, spec.ff, active=True)
+    if cfg.encoder_layers:
+        enc = cfg.encoder_layers * (_mixer_params(cfg, "attn") +
+                                    _ff_params(cfg, "mlp", False))
+        total += enc
+        active += enc
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (global, all devices)."""
+    shape = SHAPES[shape_name]
+    n = param_counts(cfg)["active"] - cfg.vocab_size * cfg.d_model  # exclude embed gather
+    n_with_head = n + (cfg.vocab_size * cfg.d_model)  # head matmul is compute
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_with_head * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_with_head * tokens
+    # decode: one token per sequence (+ KV-cache attention reads are memory, not flops)
+    return 2.0 * n_with_head * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def analyze(artifact: dict) -> Optional[dict]:
+    if artifact.get("status") != "ok":
+        return None
+    chips = 1
+    for v in artifact["mesh_shape"].values():
+        chips *= v
+    # loop-aware counts (scan bodies x trip count) when available; XLA's
+    # cost_analysis visits while bodies once and undercounts deep stacks
+    flops_dev = artifact.get("flops_loopaware", artifact["flops"])
+    bytes_dev = artifact.get("bytes_loopaware", artifact["bytes_accessed"])
+    coll_dev = sum(artifact.get("collectives_loopaware",
+                                artifact["collective_bytes"]).values())
+    eltwise_dev = artifact.get("eltwise_loopaware", 0.0)
+    # MXU and VPU run concurrently: the compute term is their max
+    t_compute = max(flops_dev / PEAK_FLOPS, eltwise_dev / VPU_FLOPS)
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / (ICI_LINKS_USED * LINK_BW)
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    cfg = configs.get_config(artifact["arch"])
+    mf = model_flops(cfg, artifact["shape"])
+    ratio = (mf / chips) / flops_dev if flops_dev else 0.0
+    hbm_gib = (artifact["memory"]["argument_bytes"] +
+               artifact["memory"]["temp_bytes"]) / 2**30
+    return {
+        "arch": artifact["arch"], "shape": artifact["shape"],
+        "mesh": artifact["mesh"], "tag": artifact.get("tag", ""),
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops_ratio": ratio,
+        "hbm_gib_per_dev": hbm_gib,
+        "fits_16g": hbm_gib <= 16.0,
+        "collective_breakdown": artifact["collective_bytes"],
+    }
+
+
+def report(art_dir: str, fmt: str = "md") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        r = analyze(a)
+        if r is None:
+            rows.append({"arch": a["arch"], "shape": a["shape"],
+                         "mesh": a.get("mesh", "?"), "tag": a.get("tag", ""),
+                         "skipped": a.get("reason", a.get("error", ""))[:60]})
+            continue
+        rows.append(r)
+    if fmt == "json":
+        return json.dumps(rows, indent=2)
+    out = ["| arch | shape | mesh | tag | compute s | memory s | collective s | "
+           "dominant | useful/HLO | HBM GiB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+                       f"— | — | — | skipped: {r['skipped']} | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['dominant']}** | "
+            f"{r['model_flops_ratio']:.2f} | {r['hbm_gib_per_dev']:.2f} | "
+            f"{'✓' if r['fits_16g'] else '✗'} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.normpath(os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")))
+    ap.add_argument("--fmt", default="md", choices=["md", "json"])
+    args = ap.parse_args()
+    print(report(args.dir, args.fmt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input specs + sharding assignments per (arch, shape, mesh).
+
+``input_specs(cfg, shape)`` returns device-allocation-free stand-ins for every
+model input of the assigned input shapes; ``modality frontends`` (whisper conv
+codec, InternViT) are stubbed as precomputed embeddings per the assignment
+carve-out. ``make_shardings`` binds logical axes to a concrete mesh per mode
+(train / prefill / decode / long-context decode) — DESIGN.md §2 table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, ModelConfig
+from repro.models import build_model
+from repro.sharding import Rules
+
+
+# decode caches hold seq_len tokens + headroom for the new token; 512 keeps the
+# cache's sequence axis divisible by every mesh-axis extent (context-parallel
+# long_500k shards seq over up to 32 devices)
+DECODE_PAD = 512
+
+
+def mode_rules(mesh, kind: str, global_batch: int) -> Rules:
+    """Sharding rules per execution mode (DESIGN §2)."""
+    overrides: Dict[str, Any] = {}
+    if kind == "train":
+        # FSDP: weight "embed" dims shard over data (ZeRO-3-style); batch over
+        # (pod, data)
+        overrides["embed"] = "data"
+    if kind == "decode" and global_batch == 1:
+        # long-context decode: context parallelism — KV sequence over (pod, data)
+        overrides["batch"] = None
+        overrides["kv_seq"] = ("pod", "data")
+    else:
+        overrides["kv_seq"] = None
+    return Rules(mesh, overrides)
+
+
+def token_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        text = S
+        if cfg.family == "vlm":
+            text = S - cfg.num_image_tokens  # image tokens are part of the budget
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), f32)
+        if cfg.family == "audio":
+            specs["audio_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_ctx, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    elif shape.kind == "prefill":
+        text = S
+        if cfg.family == "vlm":
+            text = S - cfg.num_image_tokens
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), f32)
+        if cfg.family == "audio":
+            specs["audio_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_ctx, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return specs
+
+
+import re as _re
+
+_RKEY = _re.compile(r"^r\d+$")
+
+
+def _axes_for_cache_leaf(path, leaf, seq_len: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for one cache leaf (see repro.models.model init_cache).
+    Handles both stacked (leading "layers" axis) and unstacked ("rN" path
+    keys) cache layouts."""
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    nd = leaf.ndim
+    is_cross = "cross" in keys
+    unstacked = any(_RKEY.match(k) for k in keys)
+    lead = () if unstacked else ("layers",)
+    n = nd - len(lead)
+    if name in ("k", "v") and n == 4:
+        seq_ax = None if is_cross else "kv_seq"
+        return lead + ("batch", seq_ax, "kv_heads", None)
+    if name in ("c_kv", "k_pe") and n == 3:
+        return lead + ("batch", "kv_seq", None)
+    if name == "conv" and n == 3:
+        return lead + ("batch", None, "ssm_inner")
+    if name == "ssm" and n == 3:
+        return lead + ("batch", "ssm_inner", None)
+    # xLSTM / sLSTM states and anything else: batch-sharded, rest replicated
+    return lead + ("batch",) + (None,) * (n - 1)
+
+
+def cache_axes_tree(model, batch: int, max_seq: int, *, stacked: bool = True,
+                    window_ring: bool = False):
+    template = jax.eval_shape(
+        lambda: model.init_cache(batch, max_seq, stacked=stacked,
+                                 window_ring=window_ring))
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = [_axes_for_cache_leaf(p, l, max_seq) for p, l in paths]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves), template
+
+
+def batch_axes(cfg: ModelConfig, specs: Dict[str, Any]) -> Dict[str, Tuple]:
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + (None,) * (v.ndim - 1)
+    return out
+
+
+def param_specs(model, rules: Rules, max_seq: int = 0):
+    """(ShapeDtypeStruct tree, NamedSharding tree) for params — no allocation."""
+    from repro.models.common import param_axes_tree, split_params
+
+    pshapes = jax.eval_shape(lambda rng: model.init(rng, max_seq=max_seq),
+                             jax.random.PRNGKey(0))
+    values = jax.tree.map(lambda p: p.value, pshapes,
+                          is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "value"))
+    axes = jax.tree.map(lambda p: p.axes, pshapes,
+                        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "value"))
+    shardings = jax.tree.map(
+        lambda a, s: rules.sharding(a, s.shape), axes, values,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            x is None or isinstance(x, str) for x in t))
+    return values, shardings

@@ -1,0 +1,120 @@
+"""Builders that bind (arch config, input shape, mesh) -> a jittable step with
+full in/out shardings, ready for ``.lower().compile()`` (dry-run) or execution.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, ModelConfig
+from repro.launch.specs import (DECODE_PAD, batch_axes, cache_axes_tree,
+                                mode_rules, param_specs, token_inputs)
+from repro.models import build_model
+from repro.models.common import split_params
+from repro.sharding import Rules, use_rules
+from repro.train.loop import loss_fn
+
+
+def _axes_leaf(t) -> bool:
+    return isinstance(t, tuple) and all(x is None or isinstance(x, str) for x in t)
+
+
+def _shard_tree(rules: Rules, axes_tree, shape_tree):
+    return jax.tree.map(lambda a, s: rules.sharding(a, s.shape), axes_tree,
+                        shape_tree, is_leaf=_axes_leaf)
+
+
+class Lowerable:
+    """A step function + ShapeDtypeStruct args + shardings, ready to lower."""
+
+    def __init__(self, fn, args, in_shardings, out_shardings, donate=()):
+        self.fn = fn
+        self.args = args
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.donate = donate
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        return jitted.lower(*self.args)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh,
+               rules_overrides: Optional[dict] = None,
+               options: Optional[dict] = None) -> Lowerable:
+    model = build_model(cfg)
+    rules = mode_rules(mesh, shape.kind, shape.global_batch)
+    if rules_overrides:
+        rules.mapping.update(rules_overrides)
+    if options:
+        rules.options.update(options)
+    inputs = token_inputs(cfg, shape)
+    in_batch_sh = {k: rules.sharding(a, inputs[k].shape)
+                   for k, a in batch_axes(cfg, inputs).items()}
+    max_seq_for_init = shape.seq_len + DECODE_PAD if cfg.learned_positions else 0
+    pshapes, psh = param_specs(model, rules, max_seq=max_seq_for_init)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        def step(params, batch):
+            with use_rules(rules):
+                (total, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+            return total, grads
+
+        return Lowerable(step, (pshapes, inputs), (psh, in_batch_sh),
+                         (repl, psh))
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        text_len = inputs["tokens"].shape[1]
+        cache_axes, cache_t = cache_axes_tree(model, B, S)
+        cache_sh = _shard_tree(rules, cache_axes, cache_t)
+        cl = jax.ShapeDtypeStruct((B,), jnp.int32)
+        cl_sh = rules.sharding(("batch",), (B,))
+        extras = {k: v for k, v in inputs.items() if k != "tokens"}
+        extras_sh = {k: in_batch_sh[k] for k in extras} or None
+
+        def step(params, tokens, cache, cache_len, extras):
+            with use_rules(rules):
+                logits, new_cache = model.extend(params, tokens, cache, cache_len,
+                                                 batch=extras or None)
+            return logits, new_cache
+
+        logits_sh = rules.sharding(("batch", None, "vocab"),
+                                   (B, S, cfg.vocab_size))
+        return Lowerable(
+            step,
+            (pshapes, inputs["tokens"], cache_t, cl, extras or None),
+            (psh, in_batch_sh["tokens"], cache_sh, cl_sh, extras_sh),
+            (logits_sh, cache_sh),
+            donate=(2,))
+
+    # decode: one token against a cache of seq_len (+ headroom). The cache is
+    # UNSTACKED (one donated buffer per layer) so the one-token update is an
+    # in-place dynamic-update-slice rather than a scan xs->ys full-cache copy.
+    B, S = shape.global_batch, shape.seq_len
+    max_seq = S + DECODE_PAD
+    cache_axes, cache_t = cache_axes_tree(model, B, max_seq, stacked=False,
+                                          window_ring=rules.opt("window_ring"))
+    cache_sh = _shard_tree(rules, cache_axes, cache_t)
+    cl = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cl_sh = rules.sharding(("batch",), (B,))
+
+    def step(params, tokens, cache, cache_len):
+        with use_rules(rules):
+            logits, new_cache = model.decode(params, tokens, cache, cache_len)
+        return logits, new_cache
+
+    logits_sh = rules.sharding(("batch", None, "vocab"), (B, 1, cfg.vocab_size))
+    return Lowerable(
+        step,
+        (pshapes, inputs["tokens"], cache_t, cl),
+        (psh, in_batch_sh["tokens"], cache_sh, cl_sh),
+        (logits_sh, cache_sh),
+        donate=(2,))

@@ -1,0 +1,69 @@
+"""Distributed training driver.
+
+On the production mesh this runs the same ``train_step`` the dry-run lowers;
+on this CPU container use ``--debug`` to run a reduced config on a 1x1 mesh:
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --debug --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import save_checkpoint
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.specs import mode_rules
+from repro.models import build_model
+from repro.models.common import split_params
+from repro.optim import adamw_init
+from repro.sharding import use_rules
+from repro.train.loop import TrainState, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list(configs.ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on a 1-device mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = configs.smoke_config(args.arch) if args.debug \
+        else configs.get_config(args.arch)
+    mesh = make_debug_mesh() if args.debug \
+        else make_production_mesh(multi_pod=args.multi_pod)
+    rules = mode_rules(mesh, "train", args.batch)
+    model = build_model(cfg)
+
+    with mesh, use_rules(rules):
+        params, _ = split_params(model.init(jax.random.PRNGKey(0),
+                                            max_seq=args.seq))
+        state = TrainState(params, adamw_init(params), jnp.zeros((), jnp.int32))
+        step_fn = jax.jit(make_train_step(model, base_lr=3e-4, warmup_steps=10,
+                                          total_steps=args.steps))
+        ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(args.batch).items()}
+            state, metrics = step_fn(state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} ce={float(metrics['ce']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"tok/s={(i+1)*args.batch*args.seq/(time.time()-t0):.0f}",
+                      flush=True)
+        if args.ckpt:
+            save_checkpoint(args.ckpt, state.params, step=args.steps)
+            print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,402 @@
+"""GQA/MQA/MHA attention: blockwise (flash-style) train/prefill + cached decode.
+
+The train/prefill path is an online-softmax blockwise attention written in pure
+``lax`` (double scan over query/key blocks). This is simultaneously:
+  * the memory-sane formulation for the dry-run (never materializes (S, S) scores);
+  * the reference semantics for the Pallas flash kernel (kernels/flash_attention);
+  * where mask variants live: global causal / sliding window / chunked (llama4).
+
+The decode path attends one new token against a contiguous KV cache with
+per-sequence lengths (continuous batching) and supports the same mask variants.
+Paged-cache decode lives in kernels/paged_attention with identical semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, apply_rope, dense, lconstraint, make_dense
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def make_attention_params(key, cfg, dtype):
+    """Projections are stored 3D — (d_model, heads, head_dim) — so the sharding
+    rules can only split on HEAD boundaries. A flat (d, H*hd) layout lets the
+    partitioner shard inside a head whenever H*hd divides the mesh axis but H
+    does not (gemma MQA: kv dim 1x256), which forces a cache reshard + full
+    KV all-gather per decode step (measured 2x4.9 GiB/step — §Perf iter 2)."""
+    from repro.models.common import Param, normal_init
+
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = 1.0 / math.sqrt(d)
+
+    def proj(k, heads, axis):
+        p = {"w": Param(normal_init(k, (d, heads, hd), dtype, s),
+                        ("embed", axis, None))}
+        if cfg.qkv_bias:
+            p["b"] = Param(jnp.zeros((heads, hd), dtype), (axis, None))
+        return p
+
+    p = {
+        "wq": proj(kq, H, "heads"),
+        "wk": proj(kk, KV, "kv_heads"),
+        "wv": proj(kv, KV, "kv_heads"),
+        "wo": {"w": Param(normal_init(ko, (H, hd, d), dtype,
+                                      1.0 / math.sqrt(H * hd)),
+                          ("heads", None, "embed"))},
+    }
+    if cfg.attn_out_bias:
+        p["wo"]["b"] = Param(jnp.zeros((d,), dtype), ("embed",))
+    return p
+
+
+def proj_qkv(p, x, heads, head_dim):
+    y = jnp.einsum("bsd,dhk->bshk", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def proj_out(p, x):
+    """x: (B, S, H, hd) -> (B, S, d)."""
+    y = jnp.einsum("bshk,hkd->bsd", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# mask helpers (positions are absolute token indices)
+# ---------------------------------------------------------------------------
+
+def pair_mask(q_pos, k_pos, kind: str, *, window: int = 0, chunk: int = 0,
+              causal: bool = True):
+    """(q, k) -> bool (..., Sq, Sk). True = attend."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = (k <= q) if causal else jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if kind == "window" and window:
+        m = m & (k > q - window)
+    elif kind == "chunked" and chunk:
+        m = m & ((k // chunk) == (q // chunk))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash attention (pure lax; the Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def flash_attention(q, k, v, *, q_pos, k_pos, kind: str = "global", window: int = 0,
+                    chunk: int = 0, scale: float, causal: bool = True,
+                    kv_valid: Optional[jnp.ndarray] = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    skip_masked_blocks: bool = True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D); GQA via head grouping.
+
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions. kv_valid: (B, Sk) bool.
+    Returns (B, Sq, H, D). Memory: O(q_block * kv_block) scores per step.
+
+    ``skip_masked_blocks``: branch out entire (q_block, kv_block) tiles whose mask
+    is statically empty (causal upper triangle, out-of-window, cross-chunk) — the
+    compute-roofline optimization; tile emptiness is decided on positions, so it
+    is exact, not approximate.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # may differ from D (MLA: qk_dim 192, v_dim 128)
+    G = H // KV
+    # tile sizes are tunable via rules options (§Perf: tiling hillclimb)
+    from repro.sharding import current_rules
+    rules = current_rules()
+    if rules is not None:
+        q_block = int(rules.opt("flash_q_block", q_block))
+        kv_block = int(rules.opt("flash_kv_block", kv_block))
+    qb = min(q_block, max(Sq, 1))
+    kb = min(kv_block, max(Sk, 1))
+
+    # positions may be (S,) shared or (B, S) per-sequence (continuous batching)
+    q_pos = jnp.broadcast_to(jnp.atleast_2d(q_pos), (B, Sq))
+    k_pos = jnp.broadcast_to(jnp.atleast_2d(k_pos), (B, Sk))
+
+    q, _ = _pad_to(q, 1, qb)
+    q_pos_p, _ = _pad_to(q_pos, 1, qb)
+    k, _ = _pad_to(k, 1, kb)
+    v, _ = _pad_to(v, 1, kb)
+    k_pos_p, _ = _pad_to(k_pos, 1, kb)
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Sk), bool)
+    kv_valid_p, _ = _pad_to(kv_valid, 1, kb)
+    # padding keys are invalid
+    pad_k = jnp.arange(k.shape[1]) < Sk
+    kv_valid_p = kv_valid_p & pad_k[None, :]
+
+    nq, nk = q.shape[1] // qb, k.shape[1] // kb
+    qr = q.reshape(B, nq, qb, KV, G, D).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,qb,KV,G,D)
+    kr = k.reshape(B, nk, kb, KV, D).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nk, kb, KV, Dv).transpose(1, 0, 2, 3, 4)
+    qp = q_pos_p.reshape(B, nq, qb).transpose(1, 0, 2)  # (nq,B,qb)
+    kp = k_pos_p.reshape(B, nk, kb).transpose(1, 0, 2)  # (nk,B,kb)
+    kvm = kv_valid_p.reshape(B, nk, kb).transpose(1, 0, 2)  # (nk,B,kb)
+
+    def q_step(_, q_in):
+        qi, qpi = q_in  # (B,qb,KV,G,D), (B,qb)
+
+        def kv_step(carry, k_in):
+            o, m, l = carry
+            kj, vj, kpj, kvmj = k_in
+
+            def attend(o, m, l):
+                s = jnp.einsum("bqkgd,bskd->bqkgs", qi.astype(jnp.float32),
+                               kj.astype(jnp.float32)) * scale
+                pm = pair_mask(qpi, kpj, kind, window=window, chunk=chunk,
+                               causal=causal)  # (B,qb,kb)
+                valid = pm[:, :, None, None, :] & kvmj[:, None, None, None, :]
+                s = jnp.where(valid, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                p = jnp.where(valid, p, 0.0)
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                o_new = o * alpha[..., None] + jnp.einsum(
+                    "bqkgs,bskd->bqkgd", p, vj.astype(jnp.float32))
+                return o_new, m_new, l_new
+
+            if skip_masked_blocks:
+                # tile-level static-shape emptiness check on positions only
+                any_live = pair_mask(qpi, kpj, kind, window=window, chunk=chunk,
+                                     causal=causal).any()
+                o, m, l = jax.lax.cond(any_live, attend,
+                                       lambda o, m, l: (o, m, l), o, m, l)
+            else:
+                o, m, l = attend(o, m, l)
+            return (o, m, l), None
+
+        o0 = jnp.zeros((B, qb, KV, G, Dv), jnp.float32)
+        m0 = jnp.full((B, qb, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb, KV, G), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_step, (o0, m0, l0), (kr, vr, kp, kvm))
+        o = jnp.where(l[..., None] > 0, o / jnp.maximum(l[..., None], 1e-30), 0.0)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, qp))  # (nq,B,qb,KV,G,D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, Dv)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# decode attention over a contiguous cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, total_len, *, kind: str = "global",
+                     window: int = 0, chunk: int = 0, scale: float,
+                     valid_override=None):
+    """q: (B, 1, H, D); caches: (B, Smax, KV, D); total_len: (B,) int32 —
+    number of valid cache entries *including* the token being decoded.
+    Softmax reductions are written reduction-last so a kv-seq-sharded cache
+    (context-parallel long_500k) turns them into psum-style collectives rather
+    than a cache all-gather.
+    """
+    B, _, H, D = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, D)
+    pos = jnp.arange(Smax)[None, :]  # (1,Smax)
+    L = total_len[:, None]
+    if valid_override is not None:
+        valid = valid_override
+    else:
+        valid = pos < L
+        if kind == "window" and window:
+            valid &= pos > L - 1 - window
+        elif kind == "chunked" and chunk:
+            valid &= (pos // chunk) == ((L - 1) // chunk)
+    # NB: keep the cache in its storage dtype and accumulate in f32 via
+    # preferred_element_type — an .astype(f32) here gets hoisted out of the
+    # layer scan by XLA and materializes a full-cache f32 copy (measured
+    # 2x9.2 GiB/step on gemma decode_32k — §Perf iter 2).
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd",
+                   (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_cp(q, k_cache, v_cache, total_len, *, axes, mesh,
+                        kind: str = "global", window: int = 0, chunk: int = 0,
+                        scale: float):
+    """Context-parallel decode attention (long_500k): the KV cache is sharded
+    along sequence over ``axes``; each shard computes a local flash-decode
+    partial (m, l, o) and shards merge with one LSE-weighted psum — the
+    Ring-attention idea collapsed to a single collective, which on TPU ICI
+    beats 16 ring hops for decode-sized payloads (DESIGN §2, §Perf iter 3)."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_, k_, v_, L_):
+        B, _, H, D = q_.shape
+        S_loc, KV = k_.shape[1], k_.shape[2]
+        G = H // KV
+        # global offset of this shard's cache slice
+        idx = 0
+        mult = 1
+        for a in reversed(axes):
+            idx = idx + _jax.lax.axis_index(a) * mult
+            mult *= mesh.shape[a]
+        offset = idx * S_loc
+        pos = offset + jnp.arange(S_loc)[None, :]  # (1, S_loc) global positions
+        L = L_[:, None]
+        valid = pos < L
+        if kind == "window" and window:
+            valid &= pos > L - 1 - window
+        elif kind == "chunked" and chunk:
+            valid &= (pos // chunk) == ((L - 1) // chunk)
+        qr = q_.reshape(B, KV, G, D).astype(jnp.float32)
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, k_.astype(jnp.float32)) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_loc = s.max(axis=-1)  # (B,KV,G)
+        p = jnp.exp(s - m_loc[..., None])
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        l_loc = p.sum(axis=-1)
+        o_loc = jnp.einsum("bkgs,bskd->bkgd", p, v_.astype(jnp.float32))
+        # one-shot LSE combine across shards
+        m_g = _jax.lax.pmax(m_loc, axes)
+        alpha = jnp.exp(m_loc - m_g)
+        l_g = _jax.lax.psum(l_loc * alpha, axes)
+        o_g = _jax.lax.psum(o_loc * alpha[..., None], axes)
+        o = o_g / jnp.maximum(l_g[..., None], 1e-30)
+        return o.reshape(B, 1, H, D).astype(q_.dtype)
+
+    # manual over ALL mesh axes (others fully replicated in the specs):
+    # a partially-auto mesh leaves lax.axis_index -> partition-id ambiguous
+    # for the SPMD partitioner
+    return _jax.shard_map(
+        local, mesh=mesh, axis_names=set(mesh.axis_names),
+        in_specs=(P(), P(None, axes, None, None), P(None, axes, None, None), P()),
+        out_specs=P(), check_vma=False)(q, k_cache, v_cache, total_len)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + flash / decode)
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg, x):
+    q = proj_qkv(p["wq"], x, cfg.num_heads, cfg.head_dim)
+    k = proj_qkv(p["wk"], x, cfg.num_kv_heads, cfg.head_dim)
+    v = proj_qkv(p["wv"], x, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _maybe_rope(cfg, spec, q, k, positions):
+    use = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attn_forward(p, cfg, spec, x, positions, *, kv_valid=None, causal=True):
+    """Train/prefill. x: (B,S,d); positions: (S,). Returns (out, (k, v))."""
+    q, k, v = _qkv(p, cfg, x)
+    q, k = _maybe_rope(cfg, spec, q, k, positions)
+    q = lconstraint(q, ("batch", None, "heads", None))
+    k = lconstraint(k, ("batch", None, "kv_heads", None))
+    v = lconstraint(v, ("batch", None, "kv_heads", None))
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    out = flash_attention(
+        q, k, v, q_pos=positions, k_pos=positions, kind=spec.attn_kind,
+        window=cfg.sliding_window, chunk=cfg.chunk_size, scale=scale,
+        causal=causal, kv_valid=kv_valid)
+    out = proj_out(p["wo"], out)
+    return out, (k, v)
+
+
+def attn_decode(p, cfg, spec, x, cache, cache_len):
+    """One-token decode. x: (B,1,d); cache: {"k","v"}: (B,Smax,KV,D);
+    cache_len: (B,) valid entries BEFORE this token. Returns (out, new_cache).
+
+    With the "window_ring" rules option, windowed-attention layers treat the
+    cache as a RING over absolute positions (size >= window + 1): a 500k-token
+    context then stores only the live window (survey §III.B; EXPERIMENTS §Perf
+    iteration 10). Keys are stored already-roped at their absolute positions,
+    so ring reuse needs no recomputation."""
+    from repro.sharding import current_rules
+    rules = current_rules()
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    pos = cache_len.astype(jnp.int32)  # new token position, per sequence
+    use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    ring = (rules is not None and rules.opt("window_ring")
+            and spec.attn_kind == "window" and cfg.sliding_window
+            and cache["k"].shape[1] <= cfg.sliding_window + 1024)
+    bidx = jnp.arange(B)
+    if ring:
+        W = cache["k"].shape[1]
+        slot = pos % W
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        # absolute position held by ring slot j: largest p <= L with p % W == j
+        j = jnp.arange(W)[None, :]
+        L = pos[:, None]  # the new token's absolute position
+        p_abs = L - ((L - j) % W)
+        # window over total_len = L+1 entries: keep p_abs in (L - window, L]
+        valid = (p_abs >= 0) & (p_abs > L - cfg.sliding_window)
+        scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+        out = decode_attention(q, k_cache, v_cache, pos + 1, kind="global",
+                               scale=scale, valid_override=valid)
+        out = proj_out(p["wo"], out)
+        return out, {"k": k_cache, "v": v_cache}
+    # write new kv at position cache_len (per sequence)
+    k_cache = cache["k"].at[bidx, pos].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, pos].set(v[:, 0].astype(cache["v"].dtype))
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    cp_axes = ()
+    if rules is not None and rules.opt("cp_decode"):
+        target = rules.mapping.get("kv_seq")
+        if target:
+            names = (target,) if isinstance(target, str) else tuple(target)
+            cp_axes = tuple(a for a in names if a in rules.mesh.shape)
+    if cp_axes:
+        out = decode_attention_cp(q, k_cache, v_cache, pos + 1, axes=cp_axes,
+                                  mesh=rules.mesh, kind=spec.attn_kind,
+                                  window=cfg.sliding_window,
+                                  chunk=cfg.chunk_size, scale=scale)
+    else:
+        out = decode_attention(q, k_cache, v_cache, pos + 1, kind=spec.attn_kind,
+                               window=cfg.sliding_window, chunk=cfg.chunk_size,
+                               scale=scale)
+    out = proj_out(p["wo"], out)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_attn_cache(cfg, batch, max_seq, dtype):
+    kv = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}

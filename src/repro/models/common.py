@@ -1,0 +1,203 @@
+"""Shared building blocks: params-with-logical-axes, norms, activations, RoPE.
+
+Parameters are created as ``Param(value, axes)`` leaves where ``axes`` is a tuple
+of *logical* axis names (one per array dim, ``None`` = replicated). After init the
+tree is split into a value tree (what jit sees) and an axes tree (what the
+sharding rules consume) — see ``split_params`` and ``repro.sharding.rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """-> (values_tree, axes_tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def param_axes_tree(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def make_dense(key, in_dim, out_dim, axes, dtype, *, bias=False, bias_axis=None,
+               scale=None):
+    """A (in, out) weight (+ optional bias) with fan-in init."""
+    scale = (1.0 / math.sqrt(in_dim)) if scale is None else scale
+    p = {"w": Param(normal_init(key, (in_dim, out_dim), dtype, scale), axes)}
+    if bias:
+        p["b"] = Param(jnp.zeros((out_dim,), dtype), (bias_axis if bias_axis else axes[-1],))
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def make_norm(kind: str, dim: int, dtype):
+    if kind == "rmsnorm" or kind == "rmsnorm_p1":
+        return {"scale": Param(jnp.zeros((dim,), dtype) if kind == "rmsnorm_p1"
+                               else jnp.ones((dim,), dtype), (None,))}
+    if kind == "layernorm":
+        return {"scale": Param(jnp.ones((dim,), dtype), (None,)),
+                "bias": Param(jnp.zeros((dim,), dtype), (None,))}
+    if kind == "nonparam_ln":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind in ("rmsnorm", "rmsnorm_p1"):
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        scale = p["scale"].astype(jnp.float32)
+        if kind == "rmsnorm_p1":
+            scale = 1.0 + scale
+        return (y * scale).astype(x.dtype)
+    # layer norm (parametric or not)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "silu": jax.nn.silu,
+    }[name]
+
+
+def is_glu(activation: str) -> bool:
+    return activation.endswith("_glu")
+
+
+def glu_inner_act(activation: str):
+    return act_fn(activation.split("_")[0] if is_glu(activation) else activation)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (length, dim)."""
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# chunked (sqrt-remat) time scan
+# ---------------------------------------------------------------------------
+
+def chunked_scan(step, carry, xs, *, chunk: int = 64, enabled: bool = True):
+    """lax.scan over time with chunk-level gradient checkpointing.
+
+    A plain scan saves its carry at EVERY step for the backward pass — for the
+    recurrent mixers that carry is huge (mLSTM: (B, H, dh, dh) ≈ 268 MB/dev at
+    train_4k), so a 4096-step scan wants ~1 TB/dev of residuals (measured:
+    xlstm train_4k baseline = 1383 GiB/dev, EXPERIMENTS §Perf iter 4). Scanning
+    chunks of ``chunk`` steps under ``jax.checkpoint`` stores one carry per
+    chunk and recomputes inside: memory drops ~chunk x for ~2x recurrence
+    FLOPs — the classic sqrt-remat trade, applied to time instead of depth.
+    """
+    leaves = jax.tree_util.tree_leaves(xs)
+    S = leaves[0].shape[0]
+    if not enabled or S <= chunk or S % chunk != 0:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+
+    def reshape(x):
+        return x.reshape((n, chunk) + x.shape[1:])
+
+    xs_r = jax.tree.map(reshape, xs)
+
+    @jax.checkpoint
+    def outer(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(outer, carry, xs_r)
+    ys = jax.tree.map(lambda y: y.reshape((S,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# sharding helper: logical constraint applied lazily (no-op outside a mesh)
+# ---------------------------------------------------------------------------
+
+def lconstraint(x, axes):
+    """Annotate intermediate ``x`` with logical axes; resolved by sharding rules.
+
+    Implemented via a thread-local rules context set by the launcher; when no
+    context is active (unit tests on CPU) this is the identity.
+    """
+    from repro.sharding import current_rules  # local import to avoid cycle
+
+    rules = current_rules()
+    if rules is None:
+        return x
+    return rules.constrain(x, axes)

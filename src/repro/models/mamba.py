@@ -1,0 +1,137 @@
+"""Mamba-1 selective SSM mixer (Jamba's recurrent layer, arXiv:2403.19887).
+
+Train/prefill run the selective scan with ``jax.lax.scan`` over time (TPU
+adaptation: the CUDA selective-scan kernel's shared-memory blocking has no
+Pallas analogue that beats a fused lax.scan on the MXU for these sizes — the
+recurrence is elementwise in d_inner, so the scan body is bandwidth-bound and
+XLA fuses it; see DESIGN.md §3). Decode is the O(1) single-step recurrence on a
+carried (conv window, ssm state) — there is *no* KV cache; the serving engine's
+block manager stores fixed-size state slots instead (survey §III applicability,
+DESIGN §4).
+
+d_inner is sharded over "model": x_proj/dt_proj are row/col-parallel and the
+recurrence is channelwise, so TP needs no collective inside the scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, dense, lconstraint, make_dense, normal_init
+
+
+def d_inner_of(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def dt_rank_of(cfg):
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def make_mamba_params(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    dr = dt_rank_of(cfg)
+    N = cfg.ssm_d_state
+    p = {
+        "in_proj": make_dense(ks[0], d, 2 * di, ("embed", "ssm_inner"), dtype),
+        "conv_w": Param(normal_init(ks[1], (cfg.ssm_d_conv, di), dtype, 0.5),
+                        ("conv", "ssm_inner")),
+        "conv_b": Param(jnp.zeros((di,), dtype), ("ssm_inner",)),
+        "x_proj": make_dense(ks[2], di, dr + 2 * N, ("ssm_inner", None), dtype),
+        "dt_proj": make_dense(ks[3], dr, di, (None, "ssm_inner"), dtype, bias=True,
+                              bias_axis="ssm_inner"),
+        # S4D-real init for A
+        "A_log": Param(jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(jnp.float32),
+            ("ssm_inner", "state")),
+        "D": Param(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+        "out_proj": make_dense(ks[4], di, d, ("ssm_inner", "embed"), dtype,
+                               scale=1.0 / math.sqrt(di)),
+    }
+    return p
+
+
+def _ssm_scan(A, Bc, Cc, dt, x, h0=None):
+    """A: (di,N); Bc,Cc: (B,S,N); dt,x: (B,S,di). Returns (y (B,S,di), h_last).
+
+    dA/dBx are formed *inside* the step — materializing them up front would be a
+    (B,S,di,N) tensor (hundreds of TB for jamba train_4k).
+    """
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp  # (B,di),(B,N),(B,N),(B,di)
+        dA_t = jnp.exp(dt_t[..., None] * A)  # (B,di,N) transient
+        h = dA_t * h + dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    B, S, di = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bc.transpose(1, 0, 2).astype(jnp.float32),
+          Cc.transpose(1, 0, 2).astype(jnp.float32),
+          x.transpose(1, 0, 2).astype(jnp.float32))
+    from repro.models.common import chunked_scan
+    h_last, ys = chunked_scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_last  # (B,S,di)
+
+
+def _conv_causal(p, x, conv_state=None):
+    """Depthwise causal conv over seq. x: (B,S,di). conv_state: (B,K-1,di)."""
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, di)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i][None, None, :]
+              for i in range(K))
+    out = out + p["conv_b"]
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return out, new_state
+
+
+def mamba_forward(p, cfg, x, *, conv_state=None, ssm_state=None, return_state=False):
+    """x: (B,S,d) -> (y, (conv_state, ssm_state)) if return_state else (y, None)."""
+    di = d_inner_of(cfg)
+    dr = dt_rank_of(cfg)
+    N = cfg.ssm_d_state
+    xz = dense(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = lconstraint(xin, ("batch", None, "ssm_inner"))
+    xc, new_conv = _conv_causal(p, xin, conv_state)
+    xc = jax.nn.silu(xc)
+    proj = dense(p["x_proj"], xc)  # (B,S,dr+2N) -- row-parallel: psum under TP
+    dt, Bc, Cc = jnp.split(proj, [dr, dr + N], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    S = x.shape[1]
+    if ssm_state is not None and S == 1:
+        # single-step decode
+        dA = jnp.exp(dt[:, 0, :, None] * A)
+        dBx = dt[:, 0, :, None] * Bc[:, 0, None, :] * xc[:, 0, :, None].astype(jnp.float32)
+        h_last = dA * ssm_state + dBx
+        y = jnp.einsum("bdn,bn->bd", h_last, Cc[:, 0].astype(jnp.float32))[:, None, :]
+    else:
+        # full scan (train) or chunked-prefill continuation from carried state
+        y, h_last = _ssm_scan(A, Bc, Cc, dt, xc.astype(jnp.float32), h0=ssm_state)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        return out, (new_conv, h_last.astype(jnp.float32))
+    return out, None
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    di = d_inner_of(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+    }

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill use the expanded (materialized K/V) form. Decode uses the
+*absorbed* form: queries are pre-multiplied by W_uk so attention scores are taken
+directly against the cached latent c_kv — the cache stores only
+(kv_lora_rank + qk_rope_head_dim) per token instead of
+num_heads * (qk_head_dim + v_head_dim). For the 671B config that is
+(512 + 64) vs 128 * (192 + 128) floats: a 71x KV-cache reduction, which is why
+the survey's §III KV-cache techniques compose so well with MLA (DESIGN §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, apply_rope, dense, lconstraint, make_dense, \
+    make_norm, apply_norm
+from repro.models.attention import decode_attention, flash_attention
+
+NEG_INF = -1e30
+
+
+def make_mla_params(key, cfg, dtype):
+    """Per-head matrices stored 3D (rank, heads, head_dim) so sharding rules
+    split on head boundaries only (see make_attention_params)."""
+    from repro.models.common import normal_init
+
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    H = cfg.num_heads
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = make_dense(ks[0], d, cfg.q_lora_rank, ("embed", "rank"), dtype)
+        p["q_norm"] = make_norm("rmsnorm", cfg.q_lora_rank, dtype)
+        p["wq_b"] = {"w": Param(
+            normal_init(ks[1], (cfg.q_lora_rank, H, qk_dim), dtype,
+                        1.0 / math.sqrt(cfg.q_lora_rank)),
+            ("rank", "heads", None))}
+    else:
+        p["wq"] = {"w": Param(
+            normal_init(ks[1], (d, H, qk_dim), dtype, 1.0 / math.sqrt(d)),
+            ("embed", "heads", None))}
+    # kv down-projection: latent rank + shared rope key
+    p["wkv_a"] = make_dense(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                            ("embed", "rank"), dtype)
+    p["kv_norm"] = make_norm("rmsnorm", cfg.kv_lora_rank, dtype)
+    # up-projection: per-head nope key and value
+    p["wkv_b"] = {"w": Param(
+        normal_init(ks[3], (cfg.kv_lora_rank, H,
+                            cfg.qk_nope_head_dim + cfg.v_head_dim), dtype,
+                    1.0 / math.sqrt(cfg.kv_lora_rank)),
+        ("rank", "heads", None))}
+    p["wo"] = {"w": Param(
+        normal_init(ks[4], (H, cfg.v_head_dim, d), dtype,
+                    1.0 / math.sqrt(H * cfg.v_head_dim)),
+        ("heads", None, "embed"))}
+    return p
+
+
+def _project_q(p, cfg, x):
+    if cfg.q_lora_rank:
+        q = dense(p["wq_a"], x)
+        q = apply_norm("rmsnorm", p["q_norm"], q)
+        q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"]["w"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]["w"])
+    return q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim:]
+
+
+def _latent_kv(p, cfg, x, positions):
+    """-> c_kv (B,S,rank) normalized, k_pe (B,S,1,rope_dim) roped."""
+    kv = dense(p["wkv_a"], x)
+    c_kv, k_pe = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = apply_norm("rmsnorm", p["kv_norm"], c_kv)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_pe
+
+
+def _split_wkv_b(p, cfg):
+    w = p["wkv_b"]["w"]  # (r, H, nope+v)
+    return w[..., : cfg.qk_nope_head_dim], w[..., cfg.qk_nope_head_dim:]  # (r,H,nope),(r,H,v)
+
+
+def mla_forward(p, cfg, spec, x, positions, *, kv_valid=None, causal=True):
+    """Expanded form for train/prefill. Returns (out, (c_kv, k_pe))."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_pe = _project_q(p, cfg, x)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    c_kv, k_pe = _latent_kv(p, cfg, x, positions)
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, w_uk)
+    v = jnp.einsum("bsr,rhn->bshn", c_kv, w_uv)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, H, cfg.qk_rope_head_dim))],
+                        axis=-1)
+    q = lconstraint(q, ("batch", None, "heads", None))
+    k = lconstraint(k, ("batch", None, "heads", None))
+    v = lconstraint(v, ("batch", None, "heads", None))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                          kind=spec.attn_kind, window=cfg.sliding_window,
+                          chunk=cfg.chunk_size, scale=scale, causal=causal,
+                          kv_valid=kv_valid)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"]["w"])
+    return out, (c_kv, k_pe[:, :, 0, :])
+
+
+def mla_decode(p, cfg, spec, x, cache, cache_len):
+    """Absorbed-form decode. cache: {"c_kv": (B,Smax,r), "k_pe": (B,Smax,rope)}."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    pos = cache_len.astype(jnp.int32)
+    q_nope, q_pe = _project_q(p, cfg, x)  # (B,1,H,*)
+    q_pe = apply_rope(q_pe, pos[:, None], cfg.rope_theta)
+    c_kv_new, k_pe_new = _latent_kv(p, cfg, x, pos[:, None])
+    bidx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[bidx, pos].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+    pe_cache = cache["k_pe"].at[bidx, pos].set(k_pe_new[:, 0, 0].astype(cache["k_pe"].dtype))
+
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+    # absorb: q_eff[h, r] = sum_n q_nope[h, n] * w_uk[r, h, n]
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    L = pos + 1
+    Smax = c_cache.shape[1]
+    kpos = jnp.arange(Smax)[None, :]
+    valid = kpos < L[:, None]
+    # caches stay in storage dtype; f32 accumulation via preferred_element_type
+    # (an .astype(f32) would be hoisted into a full-cache copy — see
+    # decode_attention)
+    s = jnp.einsum("bhr,bsr->bhs", q_eff.astype(c_cache.dtype), c_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhe,bse->bhs", q_pe[:, 0].astype(pe_cache.dtype),
+                       pe_cache, preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, :], s * scale, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    pr = jnp.where(valid[:, None, :], pr, 0.0)
+    pr = pr / jnp.maximum(pr.sum(axis=-1, keepdims=True), 1e-30)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(c_cache.dtype), c_cache,
+                     preferred_element_type=jnp.float32)  # latent ctx
+    out_h = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bhv,hvd->bd", out_h.astype(x.dtype),
+                     p["wo"]["w"])[:, None, :]
+    return out, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def init_mla_cache(cfg, batch, max_seq, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }

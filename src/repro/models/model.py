@@ -1,0 +1,622 @@
+"""Model factory: assembles any assigned architecture from its ModelConfig.
+
+Three entry points per model (all pure functions over a param pytree):
+
+  * ``forward(params, batch)``        — full-sequence training forward
+  * ``extend(params, tokens, cache, cache_len)`` — append a chunk (prefill,
+    chunked prefill, batched prefill); prefill == extend from an empty cache
+  * ``decode(params, tokens, cache, cache_len)`` — one-token decode step with
+    per-mixer optimized paths (absorbed MLA, O(1) SSM recurrence)
+
+Layer stacks run as ``lax.scan`` over stacked per-repeat params (see configs
+``stages``); heterogeneous patterns are unrolled inside the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (
+    Param,
+    apply_norm,
+    dense,
+    glu_inner_act,
+    is_glu,
+    is_param,
+    lconstraint,
+    make_dense,
+    make_norm,
+    normal_init,
+    sinusoidal_positions,
+)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def make_mlp_params(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d, f = cfg.d_model, cfg.d_ff
+    out1 = 2 * f if is_glu(cfg.activation) else f
+    return {
+        "w1": make_dense(k1, d, out1, ("embed", "ff"), dtype, bias=cfg.mlp_bias,
+                         bias_axis="ff"),
+        "w2": make_dense(k2, f, d, ("ff", "embed"), dtype, bias=cfg.mlp_bias,
+                         bias_axis="embed", scale=1.0 / math.sqrt(f)),
+    }
+
+
+def mlp_apply(p, cfg, x):
+    h = dense(p["w1"], x)
+    h = lconstraint(h, ("batch", None, "ff"))
+    if is_glu(cfg.activation):
+        u, g = jnp.split(h, 2, axis=-1)
+        h = glu_inner_act(cfg.activation)(g) * u
+    else:
+        h = glu_inner_act(cfg.activation)(h)
+    return dense(p["w2"], h)
+
+
+# ---------------------------------------------------------------------------
+# single layer: init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype, *, cross: bool):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": make_norm(cfg.norm, cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.make_attention_params(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_mod.make_mla_params(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.make_mamba_params(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.make_mlstm_params(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.make_slstm_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        p["cross_norm"] = make_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = attn.make_attention_params(ks[1], cfg, dtype)
+    if spec.ff == "mlp":
+        p["norm2"] = make_norm(cfg.norm, cfg.d_model, dtype)
+        p["ff"] = make_mlp_params(ks[2], cfg, dtype)
+    elif spec.ff == "moe":
+        p["norm2"] = make_norm(cfg.norm, cfg.d_model, dtype)
+        p["ff"] = moe_mod.make_moe_params(ks[2], cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# single layer: apply (train / extend / decode)
+# ---------------------------------------------------------------------------
+
+def _cross_attend(p, cfg, x, enc_k, enc_v):
+    B, S, _ = x.shape
+    q = attn.proj_qkv(p["wq"], x, cfg.num_heads, cfg.head_dim)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    T = enc_k.shape[1]
+    out = attn.flash_attention(
+        q, enc_k, enc_v, q_pos=jnp.arange(S), k_pos=jnp.arange(T), kind="global",
+        scale=scale, causal=False)
+    return attn.proj_out(p["wo"], out)
+
+
+def _ff_branch(p, spec, cfg, x, cf: float = 1.25):
+    if spec.ff == "none":
+        return x, 0.0
+    h = apply_norm(cfg.norm, p["norm2"], x)
+    if spec.ff == "mlp":
+        return x + mlp_apply(p["ff"], cfg, h), 0.0
+    y, aux = moe_mod.moe_apply(p["ff"], cfg, h, capacity_factor=cf)
+    return x + y, aux
+
+
+def _layer_forward(p, spec, cfg, x, positions, *, enc_kv=None, kv_valid=None):
+    """Training/full-sequence path. Returns (x, aux)."""
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if spec.mixer == "attn":
+        y, _ = attn.attn_forward(p["mixer"], cfg, spec, h, positions, kv_valid=kv_valid)
+    elif spec.mixer == "mla":
+        y, _ = mla_mod.mla_forward(p["mixer"], cfg, spec, h, positions, kv_valid=kv_valid)
+    elif spec.mixer == "mamba":
+        y, _ = mamba_mod.mamba_forward(p["mixer"], cfg, h)
+    elif spec.mixer == "mlstm":
+        y, _ = xlstm_mod.mlstm_forward(p["mixer"], cfg, h)
+    elif spec.mixer == "slstm":
+        y, _ = xlstm_mod.slstm_forward(p["mixer"], cfg, h)
+    x = x + y
+    if enc_kv is not None:
+        hc = apply_norm(cfg.norm, p["cross_norm"], x)
+        x = x + _cross_attend(p["cross"], cfg, hc, *enc_kv)
+    return _ff_branch(p, spec, cfg, x)
+
+
+def _attn_extend(p, cfg, spec, x, cache, cache_len):
+    """Write a chunk of new KV at [cache_len, cache_len+C) and attend."""
+    B, C, _ = x.shape
+    q, k, v = attn._qkv(p, cfg, x)
+    pos = cache_len[:, None] + jnp.arange(C)[None, :]  # (B,C)
+    use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use_rope:
+        from repro.models.common import apply_rope
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    bidx = jnp.arange(B)[:, None]
+    k_cache = cache["k"].at[bidx, pos].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, pos].set(v.astype(cache["v"].dtype))
+    Smax = k_cache.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+    kv_valid = kpos < (cache_len[:, None] + C)
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    out = attn.flash_attention(
+        q, k_cache, v_cache, q_pos=pos, k_pos=kpos, kind=spec.attn_kind,
+        window=cfg.sliding_window, chunk=cfg.chunk_size, scale=scale,
+        causal=True, kv_valid=kv_valid)
+    out = attn.proj_out(p["wo"], out)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _mla_extend(p, cfg, spec, x, cache, cache_len):
+    """Chunk-extend for MLA: append latents, expand all cached latents, attend."""
+    B, C, _ = x.shape
+    pos = cache_len[:, None] + jnp.arange(C)[None, :]
+    q_nope, q_pe = mla_mod._project_q(p, cfg, x)
+    from repro.models.common import apply_rope
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    c_kv_new, k_pe_new = mla_mod._latent_kv(p, cfg, x, pos)
+    bidx = jnp.arange(B)[:, None]
+    c_cache = cache["c_kv"].at[bidx, pos].set(c_kv_new.astype(cache["c_kv"].dtype))
+    pe_cache = cache["k_pe"].at[bidx, pos].set(k_pe_new[:, :, 0].astype(cache["k_pe"].dtype))
+    w_uk, w_uv = mla_mod._split_wkv_b(p, cfg)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_cache.astype(x.dtype), w_uk)
+    vv = jnp.einsum("bsr,rhn->bshn", c_cache.astype(x.dtype), w_uv)
+    H = cfg.num_heads
+    Smax = c_cache.shape[1]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(pe_cache[:, :, None, :].astype(x.dtype),
+                                  (B, Smax, H, cfg.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    kpos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+    kv_valid = kpos < (cache_len[:, None] + C)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    out = attn.flash_attention(q, k_full, vv, q_pos=pos, k_pos=kpos,
+                               kind=spec.attn_kind, window=cfg.sliding_window,
+                               chunk=cfg.chunk_size, scale=scale, causal=True,
+                               kv_valid=kv_valid)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"]["w"])
+    return out, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def _layer_extend(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if spec.mixer == "attn":
+        y, new_cache = _attn_extend(p["mixer"], cfg, spec, h, cache, cache_len)
+    elif spec.mixer == "mla":
+        y, new_cache = _mla_extend(p["mixer"], cfg, spec, h, cache, cache_len)
+    elif spec.mixer == "mamba":
+        y, st = mamba_mod.mamba_forward(p["mixer"], cfg, h,
+                                        conv_state=cache["conv"],
+                                        ssm_state=cache["ssm"], return_state=True)
+        new_cache = {"conv": st[0], "ssm": st[1]}
+    elif spec.mixer == "mlstm":
+        y, st = xlstm_mod.mlstm_forward(p["mixer"], cfg, h, state=cache, return_state=True)
+        new_cache = st
+    elif spec.mixer == "slstm":
+        y, st = xlstm_mod.slstm_forward(p["mixer"], cfg, h, state=cache, return_state=True)
+        new_cache = st
+    x = x + y
+    if enc_kv is not None:
+        hc = apply_norm(cfg.norm, p["cross_norm"], x)
+        x = x + _cross_attend(p["cross"], cfg, hc, *enc_kv)
+    # inference uses a generous capacity factor (survey §VI.B "dynamic gating":
+    # over-provision rather than drop tokens at serve time)
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    return x, new_cache
+
+
+def _layer_decode(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if spec.mixer == "attn":
+        y, new_cache = attn.attn_decode(p["mixer"], cfg, spec, h, cache, cache_len)
+    elif spec.mixer == "mla":
+        y, new_cache = mla_mod.mla_decode(p["mixer"], cfg, spec, h, cache, cache_len)
+    elif spec.mixer == "mamba":
+        y, st = mamba_mod.mamba_forward(p["mixer"], cfg, h, conv_state=cache["conv"],
+                                        ssm_state=cache["ssm"], return_state=True)
+        new_cache = {"conv": st[0], "ssm": st[1]}
+    elif spec.mixer == "mlstm":
+        y, st = xlstm_mod.mlstm_forward(p["mixer"], cfg, h, state=cache, return_state=True)
+        new_cache = st
+    elif spec.mixer == "slstm":
+        y, st = xlstm_mod.slstm_forward(p["mixer"], cfg, h, state=cache, return_state=True)
+        new_cache = st
+    x = x + y
+    if enc_kv is not None:
+        hc = apply_norm(cfg.norm, p["cross_norm"], x)
+        B = x.shape[0]
+        T = enc_kv[0].shape[1]
+        q = attn.proj_qkv(p["cross"]["wq"], hc, cfg.num_heads, cfg.head_dim)
+        out = attn.decode_attention(q, enc_kv[0], enc_kv[1],
+                                    jnp.full((B,), T, jnp.int32),
+                                    scale=1.0 / math.sqrt(cfg.head_dim))
+        x = x + attn.proj_out(p["cross"]["wo"], out)
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    return x, new_cache
+
+
+def _layer_cache(spec, cfg, batch, max_seq, dtype, window_ring=False):
+    if spec.mixer == "attn":
+        if window_ring and spec.attn_kind == "window" and cfg.sliding_window:
+            # ring buffer over the live window (attn_decode "window_ring")
+            max_seq = min(max_seq, cfg.sliding_window + 512)
+        return attn.init_attn_cache(cfg, batch, max_seq, dtype)
+    if spec.mixer == "mla":
+        return mla_mod.init_mla_cache(cfg, batch, max_seq, dtype)
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if spec.mixer == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    extend: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def _stack_layers_axis(tree):
+    return jax.tree.map(lambda p: Param(p.value, ("layers",) + p.axes), tree,
+                        is_leaf=is_param)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    pdtype = jnp.dtype(cfg.param_dtype)
+    cross = cfg.family == "audio"
+    remat = jax.checkpoint  # applied to the scan body for training
+
+    # ---------------- init ---------------------------------------------------
+    def init(rng, max_seq: int = 0):
+        keys = jax.random.split(rng, 8)
+        d = cfg.d_model
+        params: Dict[str, Any] = {
+            "embed": Param(normal_init(keys[0], (cfg.vocab_size, d), pdtype,
+                                       d ** -0.5),
+                           ("vocab", "embed")),
+            "final_norm": make_norm(cfg.norm, d, pdtype),
+        }
+        if cfg.learned_positions:
+            size = max(cfg.learned_positions, max_seq)
+            params["pos_embed"] = Param(
+                normal_init(keys[1], (size, d), pdtype, 0.02), (None, "embed"))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = make_dense(keys[2], d, cfg.vocab_size,
+                                           ("embed", "vocab"), pdtype,
+                                           scale=1.0 / math.sqrt(d))
+        stages = []
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_key = jax.random.fold_in(keys[3], si)
+
+            def init_one(k):
+                lk = jax.random.split(k, len(pattern))
+                return {f"l{i}": _layer_init(lk[i], spec, cfg, pdtype, cross=cross)
+                        for i, spec in enumerate(pattern)}
+
+            stacked = jax.vmap(init_one)(jax.random.split(stage_key, reps))
+            stages.append(_stack_layers_axis(stacked))
+        params["stages"] = tuple(stages)
+        if cross:  # whisper encoder
+            enc_spec = LayerSpec(mixer="attn", ff="mlp", attn_kind="global")
+
+            def enc_init_one(k):
+                return {"l0": _layer_init(k, enc_spec, cfg, pdtype, cross=False)}
+
+            params["encoder"] = {
+                "stages": (_stack_layers_axis(jax.vmap(enc_init_one)(
+                    jax.random.split(keys[4], cfg.encoder_layers))),),
+                "final_norm": make_norm(cfg.norm, d, pdtype),
+            }
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "proj": make_dense(keys[5], 2 * d, d, (None, "embed"), pdtype),
+                "norm_h": make_norm(cfg.norm, d, pdtype),
+                "norm_e": make_norm(cfg.norm, d, pdtype),
+                "layer": _layer_init(keys[6], cfg.stages[-1][0][-1], cfg, pdtype,
+                                     cross=False),
+                "final_norm": make_norm(cfg.norm, d, pdtype),
+            }
+        return params
+
+    # ---------------- shared helpers ----------------------------------------
+    def embed_tokens(params, tokens):
+        e = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        if cfg.embed_scale:
+            e = e * math.sqrt(cfg.d_model)
+        return e
+
+    def head(params, x):
+        x = apply_norm(cfg.norm, params["final_norm"], x)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        return lconstraint(logits, ("batch", None, "vocab"))
+
+    def run_encoder(params, frames):
+        """frames: (B, T, d) stubbed post-conv embeddings."""
+        T = frames.shape[1]
+        x = frames.astype(dtype) + sinusoidal_positions(T, cfg.d_model).astype(dtype)
+        enc_spec = LayerSpec(mixer="attn", ff="mlp", attn_kind="global")
+        positions = jnp.arange(T)
+
+        def body_bidir(carry, p_r):
+            p = p_r["l0"]
+            h = apply_norm(cfg.norm, p["norm1"], carry)
+            y, _ = attn.attn_forward(p["mixer"], cfg, enc_spec, h, positions,
+                                     causal=False)
+            x2 = carry + y
+            x2, _ = _ff_branch(p, enc_spec, cfg, x2)
+            return x2, None
+
+        x, _ = jax.lax.scan(body_bidir, x, params["encoder"]["stages"][0])
+        return apply_norm(cfg.norm, params["encoder"]["final_norm"], x)
+
+    def splice_vision(params, tokens, vision_embeds):
+        te = embed_tokens(params, tokens)
+        return jnp.concatenate([vision_embeds.astype(dtype), te], axis=1)
+
+    # ---------------- forward (train) ---------------------------------------
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        aux = {"moe_aux": 0.0}
+        enc = None
+        if cfg.family == "audio":
+            enc = run_encoder(params, batch["audio_frames"])
+        if cfg.family == "vlm":
+            x = splice_vision(params, tokens, batch["vision_embeds"])
+        else:
+            x = embed_tokens(params, tokens)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        if cfg.learned_positions:
+            x = x + params["pos_embed"][:S][None].astype(dtype)
+        x = lconstraint(x, ("batch", None, "embed"))
+
+        moe_total = 0.0
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_p = params["stages"][si]
+
+            if enc is not None:
+                enc_kv_stage = cross_kv_stage(params, enc, si, pattern)
+            else:
+                enc_kv_stage = None
+
+            def body(carry, xs):
+                h = carry
+                if enc_kv_stage is None:
+                    p_r = xs
+                    aux_sum = 0.0
+                    for i, spec in enumerate(pattern):
+                        h, a = _layer_forward(p_r[f"l{i}"], spec, cfg, h, positions)
+                        aux_sum = aux_sum + a
+                else:
+                    p_r, ekv = xs
+                    aux_sum = 0.0
+                    for i, spec in enumerate(pattern):
+                        h, a = _layer_forward(p_r[f"l{i}"], spec, cfg, h, positions,
+                                              enc_kv=(ekv[f"l{i}"]["k"], ekv[f"l{i}"]["v"]))
+                        aux_sum = aux_sum + a
+                return h, aux_sum
+
+            xs = stage_p if enc_kv_stage is None else (stage_p, enc_kv_stage)
+            x, auxs = jax.lax.scan(remat(body), x, xs)
+            moe_total = moe_total + jnp.sum(jnp.asarray(auxs))
+        aux["moe_aux"] = moe_total
+        logits = head(params, x)
+        if cfg.mtp_depth and "mtp" in params:
+            aux["mtp_logits"] = mtp_head(params, x, tokens)
+        return logits, aux
+
+    def cross_kv_stage(params, enc, si, pattern):
+        B, T, _ = enc.shape
+        stage_p = params["stages"][si]
+
+        def one(p_r):
+            res = {}
+            for i, spec in enumerate(pattern):
+                c = p_r[f"l{i}"]["cross"]
+                k = attn.proj_qkv(c["wk"], enc, cfg.num_kv_heads, cfg.head_dim)
+                v = attn.proj_qkv(c["wv"], enc, cfg.num_kv_heads, cfg.head_dim)
+                res[f"l{i}"] = {"k": k.astype(dtype), "v": v.astype(dtype)}
+            return res
+
+        return jax.vmap(one)(stage_p)
+
+    def mtp_head(params, h_main, tokens):
+        """DeepSeek-V3 MTP (depth 1): predict token t+2 from (h_t, emb_{t+1})."""
+        m = params["mtp"]
+        h = apply_norm(cfg.norm, m["norm_h"], h_main[:, :-1])
+        e = apply_norm(cfg.norm, m["norm_e"], embed_tokens(params, tokens[:, 1:]))
+        x = dense(m["proj"], jnp.concatenate([h, e], axis=-1))
+        S = x.shape[1]
+        x, _ = _layer_forward(m["layer"], cfg.stages[-1][0][-1], cfg, x, jnp.arange(S))
+        x = apply_norm(cfg.norm, m["final_norm"], x)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+    # ---------------- cache --------------------------------------------------
+    def init_cache(batch_size, max_seq, cache_dtype=None, *, stacked=True,
+                   window_ring=False):
+        """stacked=True: leaves carry a leading (repeats,) axis and layer loops
+        run under lax.scan (small HLO; train/prefill/engine default).
+        stacked=False: one dict entry per repeat ("r0", "r1", ...) — the decode
+        path then unrolls layers so each cache leaf is a separately-donated
+        buffer and the one-token update is an in-place dynamic-update-slice.
+        A scanned cache is threaded xs->ys, which copies the ENTIRE cache every
+        decode step (measured ~3x full-cache traffic — EXPERIMENTS §Perf)."""
+        cdt = jnp.dtype(cache_dtype) if cache_dtype else dtype
+
+        def one_rep_dict(pattern):
+            return {f"l{i}": _layer_cache(spec, cfg, batch_size, max_seq, cdt,
+                                          window_ring=window_ring)
+                    for i, spec in enumerate(pattern)}
+
+        def cross_dict():
+            return {f"l{i}": {
+                "k": jnp.zeros((batch_size, cfg.n_audio_ctx, cfg.num_kv_heads,
+                                cfg.head_dim), cdt),
+                "v": jnp.zeros((batch_size, cfg.n_audio_ctx, cfg.num_kv_heads,
+                                cfg.head_dim), cdt)}
+                for i, spec in enumerate(cfg.stages[0][0])}
+
+        stages = []
+        cross_stages = []
+        for pattern, reps in cfg.stages:
+            if stacked:
+                stages.append(jax.vmap(lambda _: one_rep_dict(pattern))(
+                    jnp.arange(reps)))
+                if cross:
+                    cross_stages.append(jax.vmap(lambda _: cross_dict())(
+                        jnp.arange(reps)))
+            else:
+                stages.append({f"r{r}": one_rep_dict(pattern)
+                               for r in range(reps)})
+                if cross:
+                    cross_stages.append({f"r{r}": cross_dict()
+                                         for r in range(reps)})
+        cache = {"stages": tuple(stages)}
+        if cross:
+            cache["cross"] = tuple(cross_stages)
+        return cache
+
+    # ---------------- extend (prefill / chunked prefill) ---------------------
+    def extend(params, tokens, cache, cache_len, *, batch=None):
+        """tokens: (B, C). cache_len: (B,). Returns (logits (B,C,V), new_cache)."""
+        extras = batch or {}
+        if cfg.family == "vlm" and "vision_embeds" in extras:
+            x = splice_vision(params, tokens, extras["vision_embeds"])
+        else:
+            x = embed_tokens(params, tokens)
+        if cfg.family == "audio" and "audio_frames" in extras:
+            enc = run_encoder(params, extras["audio_frames"])
+            cache = dict(cache, cross=cross_kv_all(params, enc))
+        if cfg.learned_positions:
+            C = x.shape[1]
+            pos = cache_len[:, None] + jnp.arange(C)[None, :]
+            size = params["pos_embed"].shape[0]
+            x = x + jnp.take(params["pos_embed"], jnp.clip(pos, 0, size - 1),
+                             axis=0).astype(dtype)
+        x = lconstraint(x, ("batch", None, "embed"))
+        new_stages = []
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_p = params["stages"][si]
+            stage_c = cache["stages"][si]
+            cross_c = cache["cross"][si] if cross and "cross" in cache else None
+
+            def body(carry, xs):
+                h = carry
+                if cross_c is None:
+                    p_r, c_r = xs
+                    ekv = None
+                else:
+                    p_r, c_r, x_r = xs
+                new_c = {}
+                for i, spec in enumerate(pattern):
+                    e = None if cross_c is None else (x_r[f"l{i}"]["k"], x_r[f"l{i}"]["v"])
+                    h, nc = _layer_extend(p_r[f"l{i}"], spec, cfg, h, c_r[f"l{i}"],
+                                          cache_len, enc_kv=e)
+                    new_c[f"l{i}"] = nc
+                return h, new_c
+
+            xs = (stage_p, stage_c) if cross_c is None else (stage_p, stage_c, cross_c)
+            x, new_stage_c = jax.lax.scan(body, x, xs)
+            new_stages.append(new_stage_c)
+        logits = head(params, x)
+        new_cache = dict(cache, stages=tuple(new_stages))
+        return logits, new_cache
+
+    def cross_kv_all(params, enc):
+        return tuple(cross_kv_stage(params, enc, si, pattern)
+                     for si, (pattern, reps) in enumerate(cfg.stages))
+
+    # ---------------- decode (one token) -------------------------------------
+    def decode(params, tokens, cache, cache_len):
+        """tokens: (B, 1). cache_len: (B,) valid entries before this token.
+
+        Accepts both cache layouts (see init_cache): stacked caches run the
+        layer loop under lax.scan; unstacked ("r0"/"r1"/... dicts) unroll it so
+        every cache leaf updates in place under buffer donation."""
+        x = embed_tokens(params, tokens)
+        if cfg.learned_positions:
+            size = params["pos_embed"].shape[0]
+            pos = jnp.clip(cache_len, 0, size - 1)
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(dtype)
+        x = lconstraint(x, ("batch", None, "embed"))
+        new_stages = []
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_p = params["stages"][si]
+            stage_c = cache["stages"][si]
+            cross_c = cache["cross"][si] if cross and "cross" in cache else None
+            unstacked = isinstance(stage_c, dict) and "r0" in stage_c
+
+            if unstacked:
+                new_stage_c = {}
+                for r in range(reps):
+                    p_r = jax.tree.map(lambda a: a[r], stage_p)
+                    c_r = stage_c[f"r{r}"]
+                    x_r = cross_c[f"r{r}"] if cross_c is not None else None
+                    new_c = {}
+                    for i, spec in enumerate(pattern):
+                        e = None if x_r is None else (x_r[f"l{i}"]["k"],
+                                                      x_r[f"l{i}"]["v"])
+                        x, nc = _layer_decode(p_r[f"l{i}"], spec, cfg, x,
+                                              c_r[f"l{i}"], cache_len, enc_kv=e)
+                        new_c[f"l{i}"] = nc
+                    new_stage_c[f"r{r}"] = new_c
+                new_stages.append(new_stage_c)
+                continue
+
+            def body(carry, xs):
+                h = carry
+                if cross_c is None:
+                    p_r, c_r = xs
+                else:
+                    p_r, c_r, x_r = xs
+                new_c = {}
+                for i, spec in enumerate(pattern):
+                    e = None if cross_c is None else (x_r[f"l{i}"]["k"], x_r[f"l{i}"]["v"])
+                    h, nc = _layer_decode(p_r[f"l{i}"], spec, cfg, h, c_r[f"l{i}"],
+                                          cache_len, enc_kv=e)
+                    new_c[f"l{i}"] = nc
+                return h, new_c
+
+            xs = (stage_p, stage_c) if cross_c is None else (stage_p, stage_c, cross_c)
+            x, new_stage_c = jax.lax.scan(body, x, xs)
+            new_stages.append(new_stage_c)
+        logits = head(params, x)
+        new_cache = dict(cache, stages=tuple(new_stages))
+        return logits, new_cache
+
+    return Model(cfg=cfg, init=init, forward=forward, extend=extend, decode=decode,
+                 init_cache=init_cache)

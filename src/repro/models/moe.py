@@ -1,0 +1,232 @@
+"""Mixture-of-Experts FFN with expert-parallel sharding (survey §VI.B).
+
+Routing follows the source models: softmax top-k (Jamba/Mixtral-style) or
+sigmoid top-k with normalized weights (DeepSeek-V3). Dispatch is capacity-bounded
+sort-based gather/scatter — no (T, E, C) one-hot dispatch tensor is ever
+materialized (the GShard einsum would be ~40 TB for deepseek train_4k).
+
+Sharding: experts live on the "model" mesh axis (expert parallelism). Token
+activations are replicated across "model" in this framework's TP scheme, so the
+baseline combine is a scatter-add whose cross-shard sum XLA lowers to an
+all-reduce over "model" — the EP collective the survey's Lina/ExFlow papers
+optimize. The shard_map all-to-all variant is a §Perf iteration (see
+EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, dense, glu_inner_act, is_glu, lconstraint, \
+    make_dense, normal_init
+
+
+def make_moe_params(key, cfg, dtype):
+    kr, k1, k2, ks = jax.random.split(key, 4)
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    glu = is_glu(cfg.activation)
+    w1_out = 2 * f if glu else f
+    p = {
+        "router": {"w": Param(normal_init(kr, (d, E), jnp.float32, 1.0 / math.sqrt(d)),
+                              ("embed", None))},
+        "w1": Param(normal_init(k1, (E, d, w1_out), dtype, 1.0 / math.sqrt(d)),
+                    ("experts", "embed", "moe_ff")),
+        "w2": Param(normal_init(k2, (E, f, d), dtype, 1.0 / math.sqrt(f)),
+                    ("experts", "moe_ff", "embed")),
+    }
+    if cfg.moe_sigmoid_router:
+        p["router_bias"] = Param(jnp.zeros((E,), jnp.float32), (None,))
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_w1"] = make_dense(ks, d, 2 * fs if glu else fs, ("embed", "ff"), dtype)
+        p["shared_w2"] = make_dense(jax.random.fold_in(ks, 1), fs, d, ("ff", "embed"), dtype)
+    return p
+
+
+def route(p, cfg, x_flat):
+    """x_flat: (T, d) -> (weights (T,k), experts (T,k) int32, aux_loss scalar)."""
+    logits = x_flat.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    E, k = cfg.num_experts, cfg.top_k
+    if cfg.moe_sigmoid_router:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, :]  # bias-corrected selection (V3)
+        _, experts = jax.lax.top_k(sel, k)
+        w = jnp.take_along_axis(scores, experts, axis=-1)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, experts = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance loss: E * sum_e f_e * P_e
+    T = x_flat.shape[0]
+    onehot_counts = jnp.zeros((E,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    f_e = onehot_counts / (T * k)
+    p_e = probs.mean(axis=0)
+    aux = E * jnp.sum(f_e * p_e)
+    return w.astype(x_flat.dtype), experts.astype(jnp.int32), aux
+
+
+def _dispatch_indices(experts: jnp.ndarray, E: int, capacity: int,
+                      valid=None):
+    """experts: (T, k) -> (slot_token (E*C,) int32 token index or T (=drop),
+                           keep_mask (T,k) bool). ``valid``: (T, k) bool — slots
+    routed elsewhere (expert parallelism: non-local experts) never dispatch."""
+    T, k = experts.shape
+    flat_e = experts.reshape(-1)  # (T*k,)
+    flat_valid = None if valid is None else valid.reshape(-1)
+    if flat_valid is not None:
+        # invalid slots sort to the end and never claim capacity
+        flat_e_sort = jnp.where(flat_valid, flat_e, E)
+    else:
+        flat_e_sort = flat_e
+    # position of each (token, slot) within its expert, in token order
+    order = jnp.argsort(flat_e_sort, stable=True)  # sorted by expert
+    sorted_e = flat_e_sort[order]
+    # index within run of equal experts
+    idx_in_run = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_expert = jnp.zeros((T * k,), jnp.int32).at[order].set(idx_in_run.astype(jnp.int32))
+    keep = pos_in_expert < capacity
+    if flat_valid is not None:
+        keep = keep & flat_valid
+    dest = jnp.where(keep, flat_e * capacity + pos_in_expert, E * capacity)
+    # slot -> flat (token*k) index; E*C slots, fill with sentinel T*k
+    slot_src = jnp.full((E * capacity + 1,), T * k, jnp.int32)
+    slot_src = slot_src.at[dest].set(jnp.arange(T * k, dtype=jnp.int32))[:-1]
+    return slot_src, keep.reshape(T, k)
+
+
+NO_DROP_THRESHOLD = 8192  # token-slots; below this, capacity = T*k (exact, no drops)
+
+
+def moe_apply(p, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (y, aux_loss). Capacity is per-expert over the batch.
+
+    Decode/small batches (T*k <= NO_DROP_THRESHOLD) get exact no-drop dispatch —
+    a serving engine must not silently drop tokens (survey §VI.B). Large prefill/
+    train batches use statistical capacity (GShard-style) with droppable tail.
+
+    When the active sharding rules request it ("sharded_moe"), the routed part
+    runs as fully-MANUAL expert parallelism under shard_map: tokens local per
+    data shard, experts local per model shard, partial outputs merged by one
+    psum over "model" — the Lina/ExFlow EP pattern with the sort/gather indices
+    kept shard-local (§Perf iteration 4).
+    """
+    from repro.sharding import current_rules
+
+    rules = current_rules()
+    if rules is not None and rules.opt("sharded_moe"):
+        y, aux = _routed_manual_ep(p, cfg, x, capacity_factor, rules)
+        if y is not None:
+            return _add_shared(p, cfg, x, y), aux
+    y, aux = _routed_dense(p, cfg, x, capacity_factor)
+    return _add_shared(p, cfg, x, y), aux
+
+
+def _add_shared(p, cfg, x, y):
+    if cfg.num_shared_experts:
+        hs = dense(p["shared_w1"], x)
+        if is_glu(cfg.activation):
+            u, g = jnp.split(hs, 2, axis=-1)
+            hs = glu_inner_act(cfg.activation)(g) * u
+        else:
+            hs = glu_inner_act(cfg.activation)(hs)
+        y = y + dense(p["shared_w2"], hs)
+    return y
+
+
+def _capacity(T: int, k: int, E: int, cf: float) -> int:
+    if T * k <= NO_DROP_THRESHOLD:
+        return T * k
+    return max(1, int(math.ceil(T * k / E * cf)))
+
+
+def _expert_ffn(p_w1, p_w2, cfg, xe):
+    h = jnp.einsum("ecd,edf->ecf", xe, p_w1)
+    if is_glu(cfg.activation):
+        u, g = jnp.split(h, 2, axis=-1)
+        h = glu_inner_act(cfg.activation)(g) * u
+    else:
+        h = glu_inner_act(cfg.activation)(h)
+    return jnp.einsum("ecf,efd->ecd", h, p_w2)  # (E, C, d)
+
+
+def _combine(slot_src, ye, weights, keep, T, k, d):
+    """Scatter-add expert outputs back to token rows with routing weights."""
+    w_flat = (weights * keep.astype(weights.dtype)).reshape(T * k)
+    slot_w = jnp.concatenate([w_flat, jnp.zeros((1,), w_flat.dtype)])[
+        jnp.minimum(slot_src, T * k)]
+    src_tok = jnp.minimum(slot_src // k, T)
+    ye_w = ye.reshape(-1, d) * slot_w[:, None]
+    return jnp.zeros((T + 1, d), ye.dtype).at[src_tok].add(ye_w)[:T]
+
+
+def _routed_dense(p, cfg, x, capacity_factor: float):
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    x_flat = x.reshape(T, d)
+    weights, experts, aux = route(p, cfg, x_flat)
+    capacity = _capacity(T, k, E, capacity_factor)
+    slot_src, keep = _dispatch_indices(experts, E, capacity)
+
+    # gather tokens into (E, C, d); sentinel slots read zeros
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], axis=0)
+    src_tok = jnp.minimum(slot_src // k, T)  # sentinel T*k -> row T (zeros)
+    xe = x_pad[src_tok].reshape(E, capacity, d)
+    xe = lconstraint(xe, ("experts", None, "embed"))
+    ye = _expert_ffn(p["w1"], p["w2"], cfg, xe)
+    ye = lconstraint(ye, ("experts", None, "embed"))
+    y = _combine(slot_src, ye, weights, keep, T, k, d)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _routed_manual_ep(p, cfg, x, capacity_factor: float, rules):
+    """Fully-manual expert parallelism: shard_map over the whole mesh, tokens
+    split on (pod, data), experts split on model, one psum("model") combine.
+    Returns (None, None) when the mesh/shapes don't divide."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    E, k = cfg.num_experts, cfg.top_k
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                       and x.shape[0] % mesh.shape[a] == 0)
+    model_size = mesh.shape.get("model", 1)
+    if not batch_axes or "model" not in mesh.shape or E % model_size != 0:
+        return None, None
+    E_loc = E // model_size
+
+    routed = {kk: p[kk] for kk in ("router", "router_bias", "w1", "w2")
+              if kk in p}
+    in_specs = ({kk: (P("model", None, None) if kk in ("w1", "w2") else P())
+                 for kk in routed},
+                P(batch_axes))
+
+    def local(p_, x_):
+        Bl, Sl, d = x_.shape
+        T = Bl * Sl
+        x_flat = x_.reshape(T, d)
+        weights, experts, aux = route(p_, cfg, x_flat)
+        lo = _jax.lax.axis_index("model") * E_loc
+        local_e = experts - lo
+        in_range = (local_e >= 0) & (local_e < E_loc)
+        capacity = _capacity(T, k, E, capacity_factor)
+        slot_src, keep = _dispatch_indices(jnp.where(in_range, local_e, 0),
+                                           E_loc, capacity, valid=in_range)
+        x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], 0)
+        src_tok = jnp.minimum(slot_src // k, T)
+        xe = x_pad[src_tok].reshape(E_loc, capacity, d)
+        ye = _expert_ffn(p_["w1"], p_["w2"], cfg, xe)
+        y = _combine(slot_src, ye, weights, keep, T, k, d)
+        y = _jax.lax.psum(y, "model")  # each token's top-k spans model shards
+        aux = _jax.lax.pmean(aux, batch_axes)  # router is replicated on model
+        return y.reshape(Bl, Sl, d).astype(x_.dtype), aux
+
+    return _jax.shard_map(
+        local, mesh=mesh, axis_names=set(mesh.axis_names),
+        in_specs=in_specs, out_specs=(P(batch_axes), P()),
+        check_vma=False)(routed, x)

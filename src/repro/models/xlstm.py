@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory, pre-up-projection) and sLSTM (scalar
+memory with recurrent gating, post-up FFN) — arXiv:2405.04517.
+
+Both are written as ``lax.scan`` recurrences over time with exponential-gate
+stabilizer state m. Decode is the O(1) single-step form; serving state per
+sequence is fixed-size (C, n, m [+ conv window] for mLSTM; c, n, h, m for
+sLSTM), managed by the engine's state-slot allocator instead of KV pages
+(DESIGN §4).
+
+TP: v/output channels ("lstm_inner") shard over "model"; q/k stay replicated so
+the per-head matrix memory C = Σ i_t v_t k_tᵀ is row-sharded and the read-out
+C q is local. (4 heads never divide a 16-way model axis; sharding d_inner does.)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, dense, lconstraint, make_dense, make_norm, \
+    apply_norm, normal_init
+
+
+def mlstm_d_inner(cfg):
+    return int(cfg.mlstm_proj_factor * cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def make_mlstm_params(key, cfg, dtype):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    di = mlstm_d_inner(cfg)
+    H = cfg.num_heads
+    p = {
+        "up_proj": make_dense(ks[0], d, 2 * di, ("embed", "lstm_inner"), dtype),
+        "conv_w": Param(normal_init(ks[1], (4, di), dtype, 0.5), ("conv", "lstm_inner")),
+        "conv_b": Param(jnp.zeros((di,), dtype), ("lstm_inner",)),
+        "wq": make_dense(ks[2], di, di, ("lstm_inner", None), dtype),
+        "wk": make_dense(ks[3], di, di, ("lstm_inner", None), dtype),
+        "wv": make_dense(ks[4], di, di, ("lstm_inner", "lstm_inner"), dtype),
+        "w_if": make_dense(ks[5], di, 2 * H, ("lstm_inner", None), dtype, bias=True),
+        "head_norm": make_norm("layernorm", di // H, dtype),
+        "down_proj": make_dense(ks[6], di, d, ("lstm_inner", "embed"), dtype,
+                                scale=1.0 / math.sqrt(di)),
+    }
+    return p
+
+
+def _causal_conv4(w, b, x, state=None):
+    K = w.shape[0]
+    pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b, xp[:, -(K - 1):]
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, state, *, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (xLSTM paper's parallel form; TPU adaptation).
+
+    The sequential recurrence is latency-bound on TPU (one (dh, dh) outer
+    product per step). Chunking turns the intra-chunk part into masked
+    (L, L) score matmuls on the MXU and carries (C, n, m) only between chunks
+    — linear-attention-with-decay math with the exponential-gate stabilizer:
+
+      b_t = Σ_{s<=t} log f_s   (in-chunk cumulative forget, inclusive)
+      g_s = log i_s - b_s
+      M_t = max(m_prev, cummax_s<=t g_s)        (stabilizer)
+      h_t ∝ e^{m_prev-M_t}(C_prev qᵗ) + Σ_{s<=t} e^{g_s-M_t}(q·k_s) v_s
+      n_t = e^{m_prev-M_t} n_prev + Σ_{s<=t} e^{g_s-M_t} k_s
+
+    Verified against the sequential scan in tests/test_recurrent.py.
+    q,k,v: (B,S,H,dh); ig,fg: (B,S,H) (fg already log-sigmoid).
+    """
+    B, S, H, dh = q.shape
+    if S % chunk != 0 or S <= chunk:
+        return _mlstm_recurrence(q, k, v, ig, fg, state)
+    nc, L = S // chunk, chunk
+
+    def resh(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)), \
+        resh(v.astype(jnp.float32))  # (nc,B,L,H,dh)
+    igs, fgs = resh(ig.astype(jnp.float32)), resh(fg.astype(jnp.float32))
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry  # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, ic, fc = inp  # (B,L,H,dh)...(B,L,H)
+        b = jnp.cumsum(fc, axis=1)  # (B,L,H) inclusive
+        g = ic - b
+        M = jnp.maximum(m_p[:, None, :], jax.lax.cummax(g, axis=1))  # (B,L,H)
+        # intra-chunk: scores[t,s] = (q_t.k_s) e^{g_s - M_t}, s<=t
+        scores = jnp.einsum("blhd,bshd->bhls", qc, kc)
+        decay = jnp.exp(g.transpose(0, 2, 1)[:, :, None, :] -
+                        M.transpose(0, 2, 1)[:, :, :, None])  # (B,H,L,S=L)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(mask[None, None], scores * decay, 0.0)
+        num_intra = jnp.einsum("bhls,bshd->blhd", w, vc)
+        n_intra = jnp.einsum("bhls,bshd->blhd",
+                             jnp.where(mask[None, None], decay, 0.0), kc)
+        # inter-chunk: previous state scaled by e^{m_p - M_t}
+        alpha = jnp.exp(m_p[:, None, :] - M)  # (B,L,H)
+        num_inter = jnp.einsum("blhk,bhvk->blhv", qc, C_p)  # (B,L,H,dh_v)
+        num = alpha[..., None] * num_inter + num_intra
+        n_t = alpha[..., None] * n_p[:, None] + n_intra
+        den = jnp.maximum(jnp.abs(jnp.einsum("blhd,blhd->blh", n_t, qc)), 1.0)
+        h = num / den[..., None]
+        # end-of-chunk state: weights e^{g_s + b_L - m_new}
+        bL = b[:, -1]  # (B,H)
+        m_new = bL + jnp.maximum(m_p, jnp.max(g, axis=1))
+        beta = jnp.exp(m_p + bL - m_new)  # (B,H)
+        w_state = jnp.exp(g + bL[:, None, :] - m_new[:, None, :])  # (B,L,H)
+        C_new = beta[..., None, None] * C_p + jnp.einsum(
+            "bshd,bshk->bhdk", w_state[..., None] * vc, kc)
+        n_new = beta[..., None] * n_p + jnp.einsum(
+            "bsh,bshd->bhd", w_state, kc)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, state, (qs, ks, vs, igs, fgs))
+    hs = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return hs, (C, n, m)
+
+
+def _mlstm_recurrence(q, k, v, ig, fg, state):
+    """q,k,v: (B,S,H,dh); ig,fg: (B,S,H). state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    Returns (h (B,S,H,dh), new_state)."""
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp  # (B,H,dh)...(B,H)
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * \
+            (v_t[..., :, None] * k_t[..., None, :])  # (B,H,dh_v,dh_k)
+        n = f_p[..., None] * n + i_p[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (q, k, v))
+    xs = xs + tuple(a.transpose(1, 0, 2).astype(jnp.float32) for a in (ig, fg))
+    from repro.models.common import chunked_scan
+    new_state, hs = chunked_scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), new_state
+
+
+def mlstm_forward(p, cfg, x, *, state=None, return_state=False):
+    """x: (B,S,d). state: dict(conv, C, n, m) or None."""
+    B, S, _ = x.shape
+    di = mlstm_d_inner(cfg)
+    H = cfg.num_heads
+    dh = di // H
+    xz = dense(p["up_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = lconstraint(xin, ("batch", None, "lstm_inner"))
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv4(p["conv_w"], p["conv_b"], xin, conv_state)
+    xc = jax.nn.silu(xc)
+    q = dense(p["wq"], xc).reshape(B, S, H, dh)
+    k = (dense(p["wk"], xc) / math.sqrt(dh)).reshape(B, S, H, dh)
+    v = dense(p["wv"], xin).reshape(B, S, H, dh)
+    gates = dense(p["w_if"], xin).astype(jnp.float32)  # (B,S,2H)
+    ig, fg = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    if state is None:
+        s0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    else:
+        s0 = (state["C"], state["n"], state["m"])
+    # long sequences take the chunkwise-parallel (MXU) form; short chunks and
+    # decode use the sequential recurrence (identical numerics, tested)
+    if S >= 128 and S % 64 == 0:
+        h, (C, n, m) = _mlstm_chunkwise(q, k, v, ig, fg, s0, chunk=64)
+    else:
+        h, (C, n, m) = _mlstm_recurrence(q, k, v, ig, fg, s0)
+    h = apply_norm("layernorm", p["head_norm"], h.astype(x.dtype))
+    h = h.reshape(B, S, di) * jax.nn.silu(z)
+    out = dense(p["down_proj"], h)
+    new_state = {"conv": new_conv, "C": C, "n": n, "m": m} if return_state else None
+    return out, new_state
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    di = mlstm_d_inner(cfg)
+    H = cfg.num_heads
+    dh = di // H
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def make_slstm_params(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    df = int(cfg.slstm_proj_factor * d)
+    p = {
+        "wx": make_dense(ks[0], d, 4 * d, ("embed", "lstm_inner"), dtype),
+        # block-diagonal recurrent weights, one (dh, 4*dh) block per head
+        "r": Param(normal_init(ks[1], (H, dh, 4 * dh), dtype, 1.0 / math.sqrt(dh)),
+                   (None, None, None)),
+        "group_norm": make_norm("layernorm", d, dtype),
+        "ffn_up": make_dense(ks[2], d, 2 * df, ("embed", "ff"), dtype),
+        "ffn_down": make_dense(ks[3], df, d, ("ff", "embed"), dtype,
+                               scale=1.0 / math.sqrt(df)),
+    }
+    return p
+
+
+def _slstm_recurrence(gx, r, state, H, dh):
+    """gx: (B,S,4d) input-gate preactivations. state: (c,n,h,m) each (B,d) [m (B,H)]."""
+
+    def step(carry, gx_t):
+        c, n, h, m = carry  # (B,d),(B,d),(B,d),(B,H)
+        B = h.shape[0]
+        hr = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hdk->bhk", hr, r)  # (B,H,4dh)
+        # reorder head-major (H,4,dh) -> gate-major (4,H,dh) to match wx layout
+        rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * H * dh)
+        g = gx_t + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)  # (B,d) each
+        gih = gi.reshape(-1, H, dh)
+        gfh = jax.nn.log_sigmoid(gf).reshape(-1, H, dh)
+        # per-head scalar stabilizer (use head-mean preactivation)
+        i_bar = gih.mean(-1)
+        f_bar = gfh.mean(-1)
+        m_new = jnp.maximum(f_bar + m, i_bar)
+        i_p = jnp.exp(gih - m_new[..., None]).reshape(gi.shape)
+        f_p = jnp.exp(gfh + (m - m_new)[..., None]).reshape(gf.shape)
+        c_new = f_p * c + i_p * jnp.tanh(gz)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = gx.transpose(1, 0, 2).astype(jnp.float32)
+    from repro.models.common import chunked_scan
+    new_state, hs = chunked_scan(step, state, xs)
+    return hs.transpose(1, 0, 2), new_state
+
+
+def slstm_forward(p, cfg, x, *, state=None, return_state=False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    gx = dense(p["wx"], x)
+    if state is None:
+        s0 = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+              jnp.zeros((B, d), jnp.float32), jnp.full((B, H), -1e30, jnp.float32))
+    else:
+        s0 = (state["c"], state["n"], state["h"], state["m"])
+    hs, (c, n, h, m) = _slstm_recurrence(gx, p["r"], s0, H, dh)
+    hs = apply_norm("layernorm", p["group_norm"], hs.astype(x.dtype))
+    # post-up gated FFN (proj factor 4/3)
+    u = dense(p["ffn_up"], hs)
+    a, g = jnp.split(u, 2, axis=-1)
+    out = dense(p["ffn_down"], jax.nn.gelu(g) * a)
+    new_state = {"c": c, "n": n, "h": h, "m": m} if return_state else None
+    return out, new_state
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, cfg.num_heads), -1e30, jnp.float32),
+    }

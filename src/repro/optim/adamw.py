@@ -1,0 +1,51 @@
+"""AdamW from scratch (optax is not available in this environment).
+
+Optimizer state mirrors the params pytree; moments are kept in f32 regardless of
+param dtype (bf16-safe). The state tree inherits the params' sharding through
+``jax.tree.map`` — under pjit each moment is sharded like its parameter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu, nu
+
+    new_params = jax.tree.map(lambda p, g, mu, nu: upd(p, g, mu, nu)[0],
+                              params, grads, state["mu"], state["nu"])
+    new_mu = jax.tree.map(lambda p, g, mu, nu: upd(p, g, mu, nu)[1],
+                          params, grads, state["mu"], state["nu"])
+    new_nu = jax.tree.map(lambda p, g, mu, nu: upd(p, g, mu, nu)[2],
+                          params, grads, state["mu"], state["nu"])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

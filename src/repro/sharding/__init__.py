@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_RULES,
+    Rules,
+    current_rules,
+    use_rules,
+)

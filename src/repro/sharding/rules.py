@@ -1,0 +1,123 @@
+"""Logical-axis -> mesh-axis sharding rules (Pope-et-al-style, survey §IV.C).
+
+Models annotate params and intermediates with *logical* axis names. A ``Rules``
+object binds those names to mesh axes for a concrete mesh, dropping a mapping
+whenever the dimension is not divisible by the mesh-axis extent (e.g. 8 KV heads
+on a 16-way model axis -> replicated KV, the GQA cost the roofline then shows).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in order; tuples mean "shard over both")
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,  # training/prefill sequence stays unsharded by default
+    "kv_seq": "data",  # context-parallel decode for long_500k (DESIGN §2)
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "moe_ff": None,
+    "experts": "model",
+    "ssm_inner": "model",
+    "lstm_inner": "model",
+    "audio_ctx": None,
+    "layers": None,  # stacked-scan leading axis
+    "conv": None,
+    "state": None,
+    "rank": None,  # MLA lora ranks stay replicated
+}
+
+_local = threading.local()
+
+
+def current_rules() -> Optional["Rules"]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional["Rules"]):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, mapping: Optional[dict] = None,
+                 options: Optional[dict] = None):
+        self.mesh = mesh
+        self.mapping = dict(DEFAULT_RULES)
+        if mapping:
+            self.mapping.update(mapping)
+        # execution-variant switches consulted by model code (perf iterations):
+        #   "sharded_moe": shard_map MoE dispatch per data shard (EXPERIMENTS §Perf)
+        #   "cp_decode":   shard_map LSE-combine context-parallel decode attention
+        self.options = dict(options or {})
+
+    def opt(self, name: str, default=False):
+        return self.options.get(name, default)
+
+    # ------------------------------------------------------------------
+    def _mesh_axes_for(self, logical: Optional[str], dim: int):
+        if logical is None:
+            return None
+        target = self.mapping.get(logical)
+        if target is None:
+            return None
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        axes = tuple(a for a in axes if a in self.mesh.shape)
+        # drop trailing axes until divisible
+        while axes:
+            extent = int(np.prod([self.mesh.shape[a] for a in axes]))
+            if dim % extent == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def pspec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(axes) == len(shape), (axes, shape)
+        used: set = set()
+        parts = []
+        for logical, dim in zip(axes, shape):
+            m = self._mesh_axes_for(logical, dim)
+            # a mesh axis may be used at most once per pspec
+            if m is not None:
+                flat = (m,) if isinstance(m, str) else m
+                if any(a in used for a in flat):
+                    m = None
+                else:
+                    used.update(flat)
+            parts.append(m)
+        return P(*parts)
+
+    def sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+    def constrain(self, x, axes):
+        if not hasattr(x, "shape"):
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(axes, x.shape))
+
+    # ------------------------------------------------------------------
+    def params_shardings(self, axes_tree, shape_tree):
+        """NamedSharding tree for a params tree given its axes + shape trees."""
+        return jax.tree.map(
+            lambda axes, sds: self.sharding(axes, sds.shape)
+            if hasattr(sds, "shape") else None,
+            axes_tree,
+            shape_tree,
+            is_leaf=lambda t: isinstance(t, tuple),
+        )

@@ -1,0 +1,1 @@
+from repro.train.loop import loss_fn, make_train_step, TrainState  # noqa: F401

@@ -1,0 +1,75 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward / one train
+step, shape + no-NaN asserts, and prefill+decode consistency with the training
+forward — deliverable (f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model, split_params
+from repro.train.loop import init_train_state, make_train_step
+
+
+def _batch(cfg, rng, B=2, S=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)),
+                                   jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            0.1 * rng.normal(size=(B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["audio_frames"] = jnp.asarray(
+            0.1 * rng.normal(size=(B, cfg.n_audio_ctx, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_shapes_no_nan(arch, rng):
+    cfg = configs.smoke_config(arch)
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=64))
+    batch = _batch(cfg, rng)
+    logits, aux = jax.jit(m.forward)(params, batch)
+    S = batch["tokens"].shape[1] + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_train_step_no_nan(arch, rng):
+    cfg = configs.smoke_config(arch)
+    m = build_model(cfg)
+    state = init_train_state(m, jax.random.PRNGKey(0), max_seq=64)
+    step = jax.jit(make_train_step(m, base_lr=1e-4, warmup_steps=2, total_steps=10))
+    batch = _batch(cfg, rng)
+    text = batch["tokens"].shape[1]
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, text)),
+                                  jnp.int32)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_prefill_decode_matches_forward(arch, rng):
+    cfg = configs.smoke_config(arch)
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=64))
+    B, S = 2, 12
+    batch = _batch(cfg, rng, B=B, S=S + 1)
+    logits_full, _ = jax.jit(m.forward)(params, batch)
+    off = cfg.num_image_tokens if cfg.family == "vlm" else 0
+
+    cache = m.init_cache(B, 64)
+    pre = dict(batch, tokens=batch["tokens"][:, :S])
+    lg_pre, cache = jax.jit(m.extend)(params, pre["tokens"], cache,
+                                      jnp.zeros((B,), jnp.int32), batch=pre)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1]),
+                               np.asarray(logits_full[:, off + S - 1]),
+                               rtol=2e-3, atol=2e-3)
+    lg_dec, _ = jax.jit(m.decode)(params, batch["tokens"][:, S: S + 1], cache,
+                                  jnp.full((B,), off + S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0]),
+                               np.asarray(logits_full[:, off + S]),
+                               rtol=2e-3, atol=2e-3)

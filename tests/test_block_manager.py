@@ -1,0 +1,95 @@
+"""Block manager invariants — unit + hypothesis property tests."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.block_manager import BlockManager, OutOfBlocks
+
+
+def test_alloc_free_roundtrip():
+    bm = BlockManager(8, 4)
+    a = bm.allocate(3)
+    assert bm.free_blocks == 5 and len(set(a)) == 3
+    bm.free(a)
+    assert bm.free_blocks == 8
+
+
+def test_out_of_blocks():
+    bm = BlockManager(2, 4)
+    bm.allocate(2)
+    with pytest.raises(OutOfBlocks):
+        bm.allocate(1)
+
+
+def test_refcount_sharing():
+    bm = BlockManager(4, 4)
+    (b,) = bm.allocate(1)
+    bm.share(b)
+    bm.free([b])
+    assert bm.free_blocks == 3  # still held by the second ref
+    bm.free([b])
+    assert bm.free_blocks == 4
+
+
+def test_copy_on_write():
+    bm = BlockManager(4, 4)
+    (b,) = bm.allocate(1)
+    assert bm.copy_on_write(b) is None  # exclusive: no copy needed
+    bm.share(b)
+    nb = bm.copy_on_write(b)
+    assert nb is not None and nb != b
+    assert bm.ref(b) == 1 and bm.ref(nb) == 1
+
+
+def test_ensure_capacity_and_waste():
+    bm = BlockManager(16, 4)
+    table = []
+    new = bm.ensure_capacity(table, 10)
+    assert len(table) == 3 and len(new) == 3
+    assert bm.waste_last_block(table, 10) == 2
+    assert bm.ensure_capacity(table, 12) == []  # already covered
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "share", "cow"]),
+                          st.integers(0, 5)), max_size=60))
+def test_property_invariants(ops):
+    """No double allocation; used+free == total; refcounts never negative."""
+    bm = BlockManager(12, 4)
+    live = []  # (block, refs_we_hold)
+    for op, arg in ops:
+        if op == "alloc":
+            n = arg % 4
+            try:
+                blocks = bm.allocate(n)
+            except OutOfBlocks:
+                continue
+            assert len(set(blocks)) == len(blocks)
+            for b in blocks:
+                assert all(b != x[0] for x in live), "double allocation"
+                live.append([b, 1])
+        elif op == "free" and live:
+            ent = live[arg % len(live)]
+            bm.free([ent[0]])
+            ent[1] -= 1
+            if ent[1] == 0:
+                live.remove(ent)
+        elif op == "share" and live:
+            ent = live[arg % len(live)]
+            bm.share(ent[0])
+            ent[1] += 1
+        elif op == "cow" and live:
+            ent = live[arg % len(live)]
+            try:
+                nb = bm.copy_on_write(ent[0])
+            except OutOfBlocks:
+                continue
+            if nb is not None:
+                ent[1] -= 1
+                if ent[1] == 0:
+                    live.remove(ent)
+                live.append([nb, 1])
+        total_refs = sum(e[1] for e in live)
+        assert bm.used_blocks == len({e[0] for e in live})
+        assert bm.used_blocks + bm.free_blocks == 12
+        assert total_refs >= bm.used_blocks

@@ -1,0 +1,74 @@
+"""Config registry integrity for the 10 assigned architectures."""
+import pytest
+
+from repro import configs
+
+EXPECTED = {
+    "deepseek-v3-671b": dict(L=61, d=7168, H=128, kv=128, vocab=129280, E=256, k=8),
+    "jamba-v0.1-52b": dict(L=32, d=4096, H=32, kv=8, vocab=65536, E=16, k=2),
+    "xlstm-1.3b": dict(L=48, d=2048, H=4, kv=4, vocab=50304, E=0, k=0),
+    "internvl2-2b": dict(L=24, d=2048, H=16, kv=8, vocab=92553, E=0, k=0),
+    "llama4-scout-17b-a16e": dict(L=48, d=5120, H=40, kv=8, vocab=202048, E=16, k=1),
+    "starcoder2-3b": dict(L=30, d=3072, H=24, kv=2, vocab=49152, E=0, k=0),
+    "qwen2.5-32b": dict(L=64, d=5120, H=40, kv=8, vocab=152064, E=0, k=0),
+    "whisper-base": dict(L=6, d=512, H=8, kv=8, vocab=51865, E=0, k=0),
+    "gemma-2b": dict(L=18, d=2048, H=8, kv=1, vocab=256000, E=0, k=0),
+    "olmo-1b": dict(L=16, d=2048, H=16, kv=16, vocab=50304, E=0, k=0),
+}
+
+
+def test_all_archs_registered():
+    assert set(configs.ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_hyperparams(arch):
+    c = configs.get_config(arch)
+    e = EXPECTED[arch]
+    assert c.num_layers == e["L"]
+    assert c.d_model == e["d"]
+    assert c.num_heads == e["H"]
+    assert c.num_kv_heads == e["kv"]
+    assert c.vocab_size == e["vocab"]
+    assert c.num_experts == e["E"]
+    assert c.top_k == e["k"]
+    assert c.citation
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_smoke_reduction_bounds(arch):
+    s = configs.smoke_config(arch)
+    assert s.num_layers == 2
+    assert s.d_model <= 512
+    assert s.num_experts <= 4
+    assert s.vocab_size <= 512
+
+
+def test_long_context_eligibility():
+    eligible = {a for a in configs.ARCHS if configs.get_config(a).long_context_ok}
+    assert eligible == {"jamba-v0.1-52b", "xlstm-1.3b", "llama4-scout-17b-a16e",
+                        "starcoder2-3b"}
+
+
+def test_deepseek_mla_dims():
+    c = configs.get_config("deepseek-v3-671b")
+    assert c.use_mla and c.kv_lora_rank == 512 and c.q_lora_rank == 1536
+    assert c.qk_nope_head_dim == 128 and c.qk_rope_head_dim == 64
+    assert c.mtp_depth == 1
+
+
+def test_jamba_interleave_ratio():
+    c = configs.get_config("jamba-v0.1-52b")
+    specs = c.layer_specs()
+    attn = sum(1 for s in specs if s.mixer == "attn")
+    mamba = sum(1 for s in specs if s.mixer == "mamba")
+    assert attn == 4 and mamba == 28  # 1:7
+    moe = sum(1 for s in specs if s.ff == "moe")
+    assert moe == 16  # every other layer
+
+
+def test_shapes_registry():
+    assert configs.get_shape("train_4k").seq_len == 4096
+    assert configs.get_shape("train_4k").global_batch == 256
+    assert configs.get_shape("long_500k").seq_len == 524288
+    assert configs.get_shape("decode_32k").kind == "decode"

@@ -1,0 +1,74 @@
+"""KV quantization: KIVI axis choices, error bounds (hypothesis), kernel vs ref."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.kv_quant import QuantConfig, dequantize, quant_error, quantize, \
+    quantize_kv, dequantize_kv
+from repro.kernels.kv_quant import dequantize_kv_pages, quantize_kv_pages
+from repro.kernels.kv_quant.ref import quantize_pages_ref
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 8), st.sampled_from(["token", "channel"]),
+       st.integers(1, 40))
+def test_roundtrip_error_bound(bits, axis, seed):
+    """|x - deq(q(x))| <= scale/2 per group (asymmetric uniform quant bound)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)) * rng.uniform(0.1, 10), jnp.float32)
+    codes, scale, zero = quantize(x, bits, axis)
+    xhat = dequantize(codes, scale, zero)
+    err = jnp.abs(xhat - x)
+    bound = jnp.broadcast_to(scale / 2, x.shape) + 1e-4 * jnp.abs(x).max()
+    assert bool((err <= bound).all())
+
+
+def test_kivi_axis_choice_on_outlier_channels(rng):
+    """KIVI's insight: keys have outlier channels -> per-channel K quant wins."""
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    x[:, 3] *= 50.0  # outlier channel
+    x[:, 17] *= 30.0
+    err_channel = quant_error(x, 4, "channel")
+    err_token = quant_error(x, 4, "token")
+    assert err_channel < err_token
+
+
+def test_more_bits_less_error(rng):
+    x = rng.normal(size=(32, 32)).astype(np.float32)
+    errs = [quant_error(x, b, "token") for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_quantize_kv_pair(rng):
+    k = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+    kq, vq, res = quantize_kv(k, v, QuantConfig(bits=8))
+    k2, v2 = dequantize_kv(kq, vq, res)
+    assert float(jnp.abs(k2 - k).max()) < 0.1
+    assert float(jnp.abs(v2 - v).max()) < 0.1
+
+
+def test_gear_residual_improves(rng):
+    k = jnp.asarray(rng.normal(size=(1, 32, 16)) * 5, jnp.float32)
+    v = k
+    kq0, vq0, _ = quantize_kv(k, v, QuantConfig(bits=2))
+    k0, _ = dequantize_kv(kq0, vq0, None)
+    kq1, vq1, res = quantize_kv(k, v, QuantConfig(bits=2, residual_rank=4))
+    k1, _ = dequantize_kv(kq1, vq1, res)
+    assert float(jnp.abs(k1 - k).mean()) < float(jnp.abs(k0 - k).mean())
+
+
+@pytest.mark.parametrize("axis", ["channel", "token"])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_kernel_matches_ref(axis, bits, rng):
+    pages = jnp.asarray(rng.normal(size=(3, 8, 16)) * 2, jnp.float32)
+    c1, s1, z1 = quantize_kv_pages(pages, bits=bits, axis=axis, impl="interpret")
+    c2, s2, z2 = quantize_pages_ref(pages, bits=bits, axis=axis)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    x1 = dequantize_kv_pages(c1, s1, z1, impl="interpret")
+    np.testing.assert_allclose(np.asarray(x1),
+                               np.asarray(c2 * s2 + z2, np.float32), rtol=1e-5,
+                               atol=1e-6)  # FMA association noise

@@ -1,0 +1,55 @@
+"""QoE / VTC metrics math + synthetic data pipeline determinism."""
+import numpy as np
+
+from repro.core.metrics import VTCCounter, qoe_score
+from repro.data import SyntheticLM
+
+
+def test_qoe_all_on_time():
+    times = [1.0 + i / 10.0 for i in range(10)]
+    assert qoe_score(times, 0.0, expected_ttft=1.0, expected_tds=10.0) == 1.0
+
+
+def test_qoe_late_tokens_penalized():
+    times = [5.0 + i for i in range(10)]  # way slower than expectation
+    q = qoe_score(times, 0.0, expected_ttft=1.0, expected_tds=10.0)
+    assert q < 0.2
+
+
+def test_qoe_faster_than_needed_no_bonus():
+    """Andes: generating faster than the user reads does not increase QoE."""
+    fast = [0.1 + i / 100 for i in range(10)]
+    normal = [1.0 + i / 10.0 for i in range(10)]
+    qf = qoe_score(fast, 0.0, expected_ttft=1.0, expected_tds=10.0)
+    qn = qoe_score(normal, 0.0, expected_ttft=1.0, expected_tds=10.0)
+    assert qf == qn == 1.0
+
+
+def test_vtc_weights_output_heavier():
+    v = VTCCounter(input_cost=1.0, output_cost=2.0)
+    v.charge("a", input_tokens=10)
+    v.charge("b", output_tokens=10)
+    assert v.service("b") == 2 * v.service("a")
+    assert v.fairness_gap() == 10.0
+
+
+def test_synthetic_deterministic():
+    a = SyntheticLM(vocab_size=100, seq_len=32, seed=5).batch(4)
+    b = SyntheticLM(vocab_size=100, seq_len=32, seed=5).batch(4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_synthetic_shared_prefixes():
+    ds = SyntheticLM(vocab_size=100, seq_len=64, seed=1, shared_prefix_len=16,
+                     prefix_groups=2)
+    seqs = [ds.sequence() for _ in range(20)]
+    prefixes = {tuple(s[:16]) for s in seqs}
+    assert len(prefixes) <= 2  # all sequences drawn from the two groups
+
+
+def test_synthetic_in_vocab():
+    ds = SyntheticLM(vocab_size=50, seq_len=128, seed=2)
+    b = ds.batch(2)
+    assert b["tokens"].max() < 50 and b["tokens"].min() >= 0

@@ -1,0 +1,74 @@
+"""Prefix cache: hash chaining, hit/miss accounting, eviction, host tier."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.block_manager import BlockManager
+from repro.core.prefix_cache import PrefixCache, chain_hashes
+
+
+def test_chain_hash_prefix_property():
+    a = chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = chain_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert a[0][0] == b[0][0]  # shared first block
+    assert a[1][0] != b[1][0]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=0, max_size=40),
+       st.lists(st.integers(0, 50), min_size=0, max_size=40))
+def test_chain_hash_equality_iff_prefix(t1, t2):
+    bs = 4
+    h1 = chain_hashes(t1, bs)
+    h2 = chain_hashes(t2, bs)
+    for i in range(min(len(h1), len(h2))):
+        same_prefix = t1[: (i + 1) * bs] == t2[: (i + 1) * bs]
+        assert (h1[i][0] == h2[i][0] and h1[i][1] == h2[i][1]) == same_prefix or \
+            (h1[i][0] == h2[i][0]) == same_prefix  # hash collision tolerated on !=
+
+
+def test_insert_then_lookup():
+    bm = BlockManager(16, 4)
+    pc = PrefixCache(bm)
+    tokens = list(range(12))
+    table = bm.allocate(3)
+    pc.insert(tokens, table)
+    dev, host, matched = pc.lookup(tokens + [99])
+    assert matched == 12 and len(dev) == 3 and not host
+    for b, t in zip(dev, table):
+        assert b == t
+        assert bm.ref(b) >= 2  # shared with the lookup
+
+
+def test_partial_prefix_hit():
+    bm = BlockManager(16, 4)
+    pc = PrefixCache(bm)
+    pc.insert(list(range(12)), bm.allocate(3))
+    dev, host, matched = pc.lookup(list(range(8)) + [99, 98, 97, 96])
+    assert matched == 8 and len(dev) == 2
+
+
+def test_eviction_respects_live_refs():
+    bm = BlockManager(16, 4)
+    pc = PrefixCache(bm)
+    t1 = bm.allocate(2)
+    pc.insert(list(range(8)), t1)  # cache refs: blocks now ref==2
+    evicted = pc.evict(10)
+    assert evicted == 0  # live sequence still holds them
+    bm.free(t1)  # sequence done; cache holds the last ref
+    evicted = pc.evict(10)
+    assert evicted == 2
+    assert bm.free_blocks == 16
+
+
+def test_host_tier_demote_restore():
+    bm = BlockManager(8, 4)
+    pc = PrefixCache(bm, host_capacity_blocks=4)
+    table = bm.allocate(2)
+    pc.insert(list(range(8)), table)
+    bm.free(table)
+    payloads = {}
+    evicted = pc.evict(2, demote_payload_fn=lambda b: f"page-{b}")
+    assert evicted == 2 and pc.stats.demoted_blocks == 2
+    dev, host, matched = pc.lookup(list(range(8)))
+    assert not dev and len(host) == 2 and matched == 8
+    assert pc.host_payload(host[0]).startswith("page-")

@@ -1,0 +1,95 @@
+"""Mamba / xLSTM recurrences: chunked streaming must equal full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import split_params
+
+
+def test_mamba_chunked_equals_full(rng, jkey):
+    cfg = configs.smoke_config("jamba-v0.1-52b")
+    p, _ = split_params(mamba_mod.make_mamba_params(jkey, cfg, jnp.float32))
+    B, S = 2, 24
+    x = jnp.asarray(0.5 * rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    full, _ = mamba_mod.mamba_forward(p, cfg, x)
+    cache = mamba_mod.init_mamba_cache(cfg, B, jnp.float32)
+    outs = []
+    conv, ssm = cache["conv"], cache["ssm"]
+    for lo, hi in [(0, 8), (8, 9), (9, 24)]:  # uneven chunks incl. single step
+        y, (conv, ssm) = mamba_mod.mamba_forward(p, cfg, x[:, lo:hi],
+                                                 conv_state=conv, ssm_state=ssm,
+                                                 return_state=True)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-4)
+
+
+def test_mlstm_chunked_equals_full(rng, jkey):
+    cfg = configs.smoke_config("xlstm-1.3b")
+    p, _ = split_params(xlstm_mod.make_mlstm_params(jkey, cfg, jnp.float32))
+    B, S = 2, 16
+    x = jnp.asarray(0.5 * rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    full, _ = xlstm_mod.mlstm_forward(p, cfg, x)
+    st = xlstm_mod.init_mlstm_cache(cfg, B, jnp.float32)
+    outs = []
+    for lo, hi in [(0, 5), (5, 6), (6, 16)]:
+        y, st = xlstm_mod.mlstm_forward(p, cfg, x[:, lo:hi], state=st,
+                                        return_state=True)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-4)
+
+
+def test_slstm_chunked_equals_full(rng, jkey):
+    cfg = configs.smoke_config("xlstm-1.3b")
+    p, _ = split_params(xlstm_mod.make_slstm_params(jkey, cfg, jnp.float32))
+    B, S = 2, 16
+    x = jnp.asarray(0.5 * rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    full, _ = xlstm_mod.slstm_forward(p, cfg, x)
+    st = xlstm_mod.init_slstm_cache(cfg, B, jnp.float32)
+    outs = []
+    for lo, hi in [(0, 7), (7, 8), (8, 16)]:
+        y, st = xlstm_mod.slstm_forward(p, cfg, x[:, lo:hi], state=st,
+                                        return_state=True)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-4)
+
+
+def test_mamba_state_bounded(rng, jkey):
+    """Recurrent state stays finite over long rollouts (stability invariant)."""
+    cfg = configs.smoke_config("jamba-v0.1-52b")
+    p, _ = split_params(mamba_mod.make_mamba_params(jkey, cfg, jnp.float32))
+    x = jnp.asarray(rng.normal(size=(1, 256, cfg.d_model)), jnp.float32)
+    _, (conv, ssm) = mamba_mod.mamba_forward(p, cfg, x, conv_state=None,
+                                             ssm_state=None, return_state=True)
+    assert np.isfinite(np.asarray(ssm)).all()
+
+
+def test_mlstm_chunkwise_equals_sequential(rng):
+    """Chunkwise-parallel (MXU) mLSTM == sequential recurrence, incl. carried
+    state (the TPU adaptation — EXPERIMENTS §Perf iteration 8)."""
+    import jax
+    from repro.models.xlstm import _mlstm_chunkwise, _mlstm_recurrence
+
+    B, S, H, dh = 2, 192, 4, 16
+    mk = lambda s: jnp.asarray(rng.normal(size=s) * 0.5, jnp.float32)
+    q, k, v = mk((B, S, H, dh)), mk((B, S, H, dh)), mk((B, S, H, dh))
+    ig = mk((B, S, H))
+    fg = jax.nn.log_sigmoid(mk((B, S, H)) + 2.0)
+    s0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+          jnp.zeros((B, H, dh), jnp.float32),
+          jnp.full((B, H), -1e30, jnp.float32))
+    h1, st1 = _mlstm_recurrence(q, k, v, ig, fg, s0)
+    h2, st2 = _mlstm_chunkwise(q, k, v, ig, fg, s0, chunk=64)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+    for a, b in zip(st1, st2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    # continuation from a nonzero state (chunked prefill)
+    h3, _ = _mlstm_recurrence(q, k, v, ig, fg, st1)
+    h4, _ = _mlstm_chunkwise(q, k, v, ig, fg, st2, chunk=64)
+    np.testing.assert_allclose(np.asarray(h3), np.asarray(h4), atol=1e-4)

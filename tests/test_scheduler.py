@@ -1,0 +1,126 @@
+"""Scheduler: token budgets, stall-free batching, policies — unit + property."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.metrics import VTCCounter
+from repro.core.request import Request, SeqState, SeqStatus
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import Scheduler, SchedulerConfig
+
+
+def mkseq(rid, prompt_len, arrival=0.0, user="u"):
+    return SeqState(request=Request(request_id=rid, prompt=list(range(prompt_len)),
+                                    arrival_time=arrival, user_id=user))
+
+
+def test_budget_respected():
+    sch = Scheduler(SchedulerConfig(max_batch_slots=4, max_batched_tokens=32,
+                                    prefill_chunk=16))
+    for i in range(4):
+        sch.add(mkseq(f"r{i}", 100, arrival=i))
+    plan = sch.plan()
+    assert plan.num_tokens <= 32
+    assert plan.num_seqs <= 4
+
+
+def test_stall_free_decodes_always_scheduled():
+    """Sarathi's property: decodes are never stalled behind prefill chunks."""
+    sch = Scheduler(SchedulerConfig(max_batch_slots=4, max_batched_tokens=20,
+                                    prefill_chunk=16))
+    d1, d2 = mkseq("d1", 4, 0), mkseq("d2", 4, 1)
+    for s in (d1, d2):
+        s.status = SeqStatus.RUNNING
+        s.num_computed = 4
+        s.generated = [1]
+        sch.running.append(s)
+    big = mkseq("big", 1000, 2)
+    sch.add(big)
+    plan = sch.plan()
+    scheduled = {c.seq.request_id: c.length for c in plan.chunks}
+    assert scheduled.get("d1") == 1 and scheduled.get("d2") == 1
+    assert scheduled.get("big", 0) <= 18  # remaining budget only
+
+
+def test_chunked_prefill_progression():
+    sch = Scheduler(SchedulerConfig(max_batch_slots=2, max_batched_tokens=16,
+                                    prefill_chunk=8))
+    s = mkseq("a", 30)
+    sch.add(s)
+    seen = 0
+    for _ in range(10):
+        plan = sch.plan()
+        if not plan.chunks:
+            break
+        for c in plan.chunks:
+            assert c.start == c.seq.num_computed
+            c.seq.num_computed += c.length
+            seen += c.length
+        if s.num_computed >= 30:
+            break
+    assert s.num_computed >= 30
+
+
+def test_exact_chunks_pow2():
+    sch = Scheduler(SchedulerConfig(max_batch_slots=2, max_batched_tokens=64,
+                                    prefill_chunk=16, exact_chunks=True))
+    s = mkseq("a", 37)
+    sch.add(s)
+    lengths = []
+    for _ in range(10):
+        plan = sch.plan()
+        if not plan.chunks:
+            break
+        for c in plan.chunks:
+            lengths.append(c.length)
+            c.seq.num_computed += c.length
+        if s.num_computed >= 37:
+            break
+    assert sum(lengths) == 37
+    # every non-final chunk is a power of two
+    for ln in lengths[:-1]:
+        assert (ln & (ln - 1)) == 0
+
+
+def test_vtc_policy_prefers_least_served():
+    vtc = VTCCounter()
+    vtc.charge("heavy", output_tokens=1000)
+    sch = Scheduler(SchedulerConfig(max_batch_slots=1, max_batched_tokens=8,
+                                    prefill_chunk=8, policy="vtc"), vtc)
+    sch.add(mkseq("h", 8, arrival=0.0, user="heavy"))
+    sch.add(mkseq("l", 8, arrival=1.0, user="light"))
+    plan = sch.plan()
+    assert plan.chunks[0].seq.request_id == "l"
+
+
+def test_preempt_requeues_front_and_resets():
+    sch = Scheduler(SchedulerConfig())
+    s = mkseq("a", 10)
+    sch.add(s)
+    sch.plan()  # admits
+    s.num_computed = 6
+    sch.preempt(s)
+    assert s.status == SeqStatus.PREEMPTED
+    assert s.num_computed == 0
+    assert sch.waiting[0] is s
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=10),
+       st.integers(8, 64), st.integers(1, 8))
+def test_property_budget_never_exceeded(prompt_lens, budget, slots):
+    sch = Scheduler(SchedulerConfig(max_batch_slots=slots,
+                                    max_batched_tokens=budget, prefill_chunk=16))
+    for i, pl in enumerate(prompt_lens):
+        sch.add(mkseq(f"r{i}", pl, arrival=i))
+    for _ in range(100):
+        plan = sch.plan()
+        if not plan.chunks:
+            break
+        assert plan.num_tokens <= budget
+        assert plan.num_seqs <= slots
+        for c in plan.chunks:
+            c.seq.num_computed += c.length
+            if not c.seq.in_prefill:
+                c.seq.generated.append(0)
+                if len(c.seq.generated) >= 2:
+                    sch.finish(c.seq)

@@ -1,0 +1,61 @@
+"""Sharding rules: logical->mesh mapping, divisibility fallback, dedup."""
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import Rules
+
+
+class FakeMesh:
+    """Rules.pspec only consults mesh.shape."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_basic_mapping():
+    r = Rules(FakeMesh(data=16, model=16))
+    assert r.pspec(("batch", None, "vocab"), (256, 4096, 129280)) == \
+        P(("data",), None, "model") or \
+        r.pspec(("batch", None, "vocab"), (256, 4096, 129280)) == \
+        P("data", None, "model")
+
+
+def test_multi_axis_batch_with_pod():
+    r = Rules(FakeMesh(pod=2, data=16, model=16))
+    spec = r.pspec(("batch",), (256,))
+    assert spec == P(("pod", "data"))
+
+
+def test_divisibility_fallback_replicates():
+    r = Rules(FakeMesh(data=16, model=16))
+    # 8 kv heads cannot shard over 16-way model axis -> replicated
+    spec = r.pspec(("batch", None, "kv_heads", None), (128, 32776, 8, 128))
+    assert spec[2] is None
+    # 16 kv heads can
+    spec = r.pspec(("batch", None, "kv_heads", None), (128, 32776, 16, 128))
+    assert spec[2] == "model"
+
+
+def test_multi_axis_partial_drop():
+    r = Rules(FakeMesh(pod=2, data=16, model=16))
+    # batch=16 divisible by 16 (data) but not 32 (pod*data) -> drops pod... the
+    # implementation drops trailing axes until divisible
+    spec = r.pspec(("batch",), (16,))
+    assert spec in (P(("pod",)), P("pod"))  # 16 % 2 == 0 keeps ("pod",) only? no:
+    # NOTE: ("pod","data") -> drop trailing "data" -> ("pod",): 16 % 2 == 0 OK
+
+
+def test_axis_used_once():
+    r = Rules(FakeMesh(data=16, model=16))
+    # both dims want "model": second use must be dropped
+    spec = r.pspec(("heads", "ff"), (32, 4096))
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_unknown_logical_replicates():
+    r = Rules(FakeMesh(data=16, model=16))
+    assert r.pspec((None, "nonexistent"), (4, 4)) == P(None, None)
+
+
+def test_missing_mesh_axis_dropped():
+    r = Rules(FakeMesh(data=16, model=16))  # no "pod"
+    assert r.pspec(("batch",), (256,)) in (P(("data",)), P("data"))

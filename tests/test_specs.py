@@ -1,0 +1,66 @@
+"""Input specs + cache axes classification (launch/specs.py)."""
+import jax
+import pytest
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch.specs import cache_axes_tree, token_inputs
+from repro.models import build_model
+
+
+def test_train_inputs_dense():
+    cfg = configs.get_config("olmo-1b")
+    specs = token_inputs(cfg, SHAPES["train_4k"])
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["labels"].shape == (256, 4096)
+
+
+def test_train_inputs_vlm_budget():
+    """Image tokens count against the 4096 sequence budget (early fusion)."""
+    cfg = configs.get_config("internvl2-2b")
+    specs = token_inputs(cfg, SHAPES["train_4k"])
+    assert specs["vision_embeds"].shape == (256, 256, 2048)
+    assert specs["tokens"].shape == (256, 4096 - 256)
+
+
+def test_audio_inputs_stubbed_frames():
+    cfg = configs.get_config("whisper-base")
+    specs = token_inputs(cfg, SHAPES["prefill_32k"])
+    assert specs["audio_frames"].shape == (32, 1500, 512)
+    assert specs["tokens"].shape == (32, 32768)
+
+
+def test_decode_inputs_one_token():
+    cfg = configs.get_config("qwen2.5-32b")
+    specs = token_inputs(cfg, SHAPES["decode_32k"])
+    assert specs["tokens"].shape == (128, 1)
+
+
+@pytest.mark.parametrize("arch,expected_kinds", [
+    ("olmo-1b", {"kv_seq"}),                 # pure attention: KV only
+    ("jamba-v0.1-52b", {"kv_seq", "ssm"}),   # hybrid: KV + mamba state
+    ("xlstm-1.3b", {"state_only"}),          # no KV at all
+    ("deepseek-v3-671b", {"latent"}),        # MLA latent cache
+])
+def test_cache_axes_classification(arch, expected_kinds):
+    cfg = configs.smoke_config(arch)
+    m = build_model(cfg)
+    axes_tree, template = cache_axes_tree(m, batch=2, max_seq=64)
+    leaves = jax.tree_util.tree_leaves(
+        axes_tree, is_leaf=lambda t: isinstance(t, tuple) and all(
+            x is None or isinstance(x, str) for x in t))
+    kinds = set()
+    for ax in leaves:
+        if "kv_seq" in ax and "kv_heads" in ax:
+            kinds.add("kv_seq")
+        elif "kv_seq" in ax:
+            kinds.add("latent")
+        elif "ssm_inner" in ax:
+            kinds.add("ssm")
+        else:
+            kinds.add("state_only")
+    for want in expected_kinds:
+        assert want in kinds, (arch, kinds)
+    # every leaf is batch-sharded after the layers axis
+    for ax in leaves:
+        assert ax[0] == "layers" and ax[1] == "batch"
