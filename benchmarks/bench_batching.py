@@ -39,8 +39,9 @@ def run_static(cfg, m, params, requests):
     return total_tokens, steps, time.perf_counter() - t0
 
 
-def run_continuous(cfg, m, params, requests):
+def run_continuous(cfg, m, params, requests, backend="gathered"):
     eng = make_engine(enable_prefix_cache=False,
+                      execution_backend=backend,
                       scheduler=SchedulerConfig(max_batch_slots=4,
                                                 max_batched_tokens=256,
                                                 prefill_chunk=64))
@@ -50,7 +51,8 @@ def run_continuous(cfg, m, params, requests):
                                 sampling=r.sampling))
     eng.run()
     tokens = sum(len(s.generated) for s in eng.seqs.values())
-    return tokens, eng.steps, time.perf_counter() - t0
+    wb = eng.paged_runner.writeback_bytes if eng.paged_runner else 0
+    return tokens, eng.steps, time.perf_counter() - t0, eng.host_copy_bytes, wb
 
 
 def main():
@@ -58,11 +60,19 @@ def main():
     cfg, m, params = small_model()
     reqs = make_requests(cfg, 12, rng, gen_lo=2, gen_hi=30)
     tok_s, steps_s, dt_s = run_static(cfg, m, params, reqs)
-    tok_c, steps_c, dt_c = run_continuous(cfg, m, params, reqs)
+    tok_c, steps_c, dt_c, hcb_c, _ = run_continuous(cfg, m, params, reqs)
+    tok_p, steps_p, dt_p, hcb_p, wb_p = run_continuous(cfg, m, params, reqs,
+                                                       backend="auto")
     emit("batching_static", 1e6 * dt_s / max(tok_s, 1),
          f"tokens={tok_s};steps={steps_s}")
     emit("batching_continuous", 1e6 * dt_c / max(tok_c, 1),
-         f"tokens={tok_c};steps={steps_c};step_ratio={steps_s / max(steps_c,1):.2f}")
+         f"tokens={tok_c};steps={steps_c};host_copy_bytes={hcb_c};"
+         f"step_ratio={steps_s / max(steps_c,1):.2f}")
+    # reduction counts the paged path's O(tokens) writeback in the
+    # denominator, same definition as bench_paging's host_copy_reduction
+    emit("batching_continuous_paged", 1e6 * dt_p / max(tok_p, 1),
+         f"tokens={tok_p};steps={steps_p};host_copy_bytes={hcb_p};"
+         f"host_copy_reduction={hcb_c / max(hcb_p + wb_p, 1):.1f}x")
 
 
 if __name__ == "__main__":

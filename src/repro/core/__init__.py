@@ -1,6 +1,12 @@
 """The survey's contribution areas as a working serving system (DESIGN.md §0)."""
 from repro.core.block_manager import BlockManager, OutOfBlocks  # noqa: F401
 from repro.core.engine import EngineConfig, LLMEngine  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    GatheredRunner,
+    ModelRunner,
+    PagedModelState,
+    PagedRunner,
+)
 from repro.core.kv_quant import QuantConfig, quantize_kv, dequantize_kv  # noqa: F401
 from repro.core.metrics import VTCCounter, finalize_request, qoe_score  # noqa: F401
 from repro.core.prefix_cache import PrefixCache  # noqa: F401

@@ -1,30 +1,44 @@
 """LLMEngine: continuous-batching serving engine over paged KV storage.
 
-Architecture (DESIGN.md §1): the block manager / prefix cache do host-side
-paging *accounting*; physical pages live in per-layer ``PagedStore`` arrays
-(block-indexed, exactly the layout the Pallas paged-attention kernel consumes
-on TPU). Each engine step gathers the scheduled sequences' pages into a dense
-(B, W) cache window, runs the jitted ``model.extend`` (decodes are chunks of
-length 1 — SplitFuse unified batching), then scatters the newly written
-positions back to their pages. On CPU this gather/scatter is numpy memcpy; on
-TPU the same step runs the paged kernel directly on the stores (no gather) —
-the two paths share all scheduling/allocation logic.
+Architecture (DESIGN.md §1, docs/executors.md): this module is the *policy*
+layer — admission, scheduling, block allocation, copy-on-write, prefix
+caching, preemption, sampling, metrics. *Mechanism* lives in
+``repro.core.executor``: the block manager / prefix cache do host-side paging
+accounting, physical pages live in per-layer ``PagedModelState`` stores
+(block-indexed, exactly the layout the Pallas paged-attention kernel
+consumes), and a ``ModelRunner`` backend executes each scheduled batch:
 
-Recurrent mixers (Mamba/xLSTM) use fixed-size state slots; whisper cross-KV is
-per-sequence state as well. Models mixing both (Jamba) use both stores.
+  * ``GatheredRunner`` — stages a dense (B, W) cache window, runs the jitted
+    ``model.extend`` (decodes are chunks of length 1 — SplitFuse unified
+    batching), scatters written positions back. Prefill always runs here, as
+    do state-mixer models (Mamba/xLSTM/whisper cross-KV), MLA, windowed /
+    chunked attention, and KV-quantized stores.
+  * ``PagedRunner`` — decode chunks of pure global-attention models run
+    ``model.decode_paged`` directly against the page stores through block
+    tables (the Pallas ``paged_attention`` op; interpret/ref on CPU): no
+    (B, W) gather, no full-window scatter, only the new token's K/V is
+    written. ``store.host_copy_bytes`` stays flat on these steps.
+
+``EngineConfig.execution_backend`` selects: "auto" (paged when the model
+supports it), "gathered", or "paged" (error if unsupported). Scheduling,
+allocation and all policy above is shared by both backends — a step's
+``StepPlan`` arrives pre-split into decode vs. prefill chunks.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.block_manager import BlockManager, OutOfBlocks
-from repro.core.kv_quant import QuantConfig, dequantize, quantize
+from repro.core.executor import make_runners, marshal_batch
+from repro.core.executor.base import ModelRunner
+from repro.core.executor.state import PagedModelState  # noqa: F401 (re-export)
+from repro.core.kv_quant import QuantConfig
 from repro.core.metrics import RequestMetrics, VTCCounter, finalize_request
 from repro.core.prefix_cache import PrefixCache
 from repro.core.request import Request, SeqState, SeqStatus
@@ -42,124 +56,14 @@ class EngineConfig:
     enable_prefix_cache: bool = True
     host_cache_blocks: int = 0  # AttentionStore host tier (0 = off)
     kv_quant: Optional[QuantConfig] = None  # quantize pages at rest (KIVI)
+    execution_backend: str = "auto"  # auto | gathered | paged
+    paged_impl: str = "auto"  # paged-attention op impl: auto | pallas | interpret | ref
     seed: int = 0
 
 
 def _has_state_mixer(cfg) -> bool:
     return any(s.mixer in ("mamba", "mlstm", "slstm")
                for p, _ in cfg.stages for s in p) or cfg.family == "audio"
-
-
-class PagedModelState:
-    """Physical page/state stores matching the model's cache pytree."""
-
-    def __init__(self, model, engine_cfg: EngineConfig):
-        self.model = model
-        self.cfg = engine_cfg
-        B, W = 1, engine_cfg.max_model_len
-        template = jax.eval_shape(lambda: model.init_cache(B, W))
-        leaves, self.treedef = jax.tree_util.tree_flatten(template)
-        paths = jax.tree_util.tree_flatten_with_path(template)[0]
-        self.kinds: List[str] = []
-        self.stores: List[np.ndarray] = []
-        bs = engine_cfg.block_size
-        for (path, leaf) in paths:
-            shape = leaf.shape
-            # stage leaves are (R, B, ...); paged iff the post-batch axis == W
-            if len(shape) >= 3 and shape[1] == B and shape[2] == W:
-                self.kinds.append("paged")
-                self.stores.append(np.zeros(
-                    (shape[0], engine_cfg.num_blocks, bs) + tuple(shape[3:]),
-                    dtype=leaf.dtype))
-            else:
-                self.kinds.append("state")
-                self.stores.append(np.zeros(
-                    (shape[0], engine_cfg.num_state_slots) + tuple(shape[2:]),
-                    dtype=leaf.dtype))
-
-    # ------------------------------------------------------------------
-    def gather(self, tables: np.ndarray, slots: np.ndarray):
-        """tables: (B, nmax) int block ids; slots: (B,) int state slots.
-        Returns the model cache pytree with leaves (R, B, W, ...) / (R, B, ...)."""
-        out = []
-        W = self.cfg.max_model_len
-        for kind, store in zip(self.kinds, self.stores):
-            if kind == "paged":
-                g = store[:, tables]  # (R, B, nmax, bs, ...)
-                R, B, nb, bs = g.shape[:4]
-                out.append(jnp.asarray(g.reshape((R, B, nb * bs) + g.shape[4:])[:, :, :W]))
-            else:
-                out.append(jnp.asarray(store[:, slots]))
-        return jax.tree_util.tree_unflatten(self.treedef, out)
-
-    def scatter(self, new_cache, tables: np.ndarray, slots: np.ndarray,
-                starts: List[int], lengths: List[int],
-                quant: Optional[QuantConfig] = None) -> None:
-        """Write back the positions [starts[b], starts[b]+lengths[b]) per seq."""
-        bs = self.cfg.block_size
-        leaves = jax.tree_util.tree_flatten(new_cache)[0]
-        for kind, store, leaf in zip(self.kinds, self.stores, leaves):
-            arr = np.asarray(leaf)
-            if kind == "paged":
-                for b, (st, ln) in enumerate(zip(starts, lengths)):
-                    if ln <= 0:
-                        continue
-                    pos = np.arange(st, st + ln)
-                    blk = tables[b, pos // bs]
-                    off = pos % bs
-                    payload = arr[:, b, pos]
-                    if quant is not None:
-                        # KIVI quantize-at-rest roundtrip (layout unchanged;
-                        # packed int pages are the Pallas kernel's concern)
-                        axis = "channel" if payload.ndim >= 3 else "token"
-                        codes, scale, zero = quantize(jnp.asarray(payload),
-                                                      quant.bits, axis)
-                        payload = np.asarray(dequantize(codes, scale, zero),
-                                             dtype=arr.dtype)
-                    store[:, blk, off] = payload
-            else:
-                for b, ln in enumerate(lengths):
-                    if ln <= 0:
-                        continue
-                    store[:, slots[b]] = arr[:, b]
-
-    def copy_block(self, src: int, dst: int) -> None:
-        for kind, store in zip(self.kinds, self.stores):
-            if kind == "paged":
-                store[:, dst] = store[:, src]
-
-    def block_payload(self, block: int):
-        """Serialize one block's pages across layers (host-tier demotion)."""
-        return [store[:, block].copy() for kind, store in
-                zip(self.kinds, self.stores) if kind == "paged"]
-
-    def restore_block(self, block: int, payload) -> int:
-        i = 0
-        nbytes = 0
-        for kind, store in zip(self.kinds, self.stores):
-            if kind == "paged":
-                store[:, block] = payload[i]
-                nbytes += payload[i].nbytes
-                i += 1
-        return nbytes
-
-    def kv_bytes_per_block(self) -> int:
-        return sum(int(np.prod(s.shape[2:])) * s.dtype.itemsize * s.shape[0]
-                   for k, s in zip(self.kinds, self.stores) if k == "paged")
-
-    def state_payload(self, slot: int):
-        return [store[:, slot].copy() for kind, store in
-                zip(self.kinds, self.stores) if kind == "state"]
-
-    def restore_state(self, slot: int, payload) -> int:
-        i = 0
-        nbytes = 0
-        for kind, store in zip(self.kinds, self.stores):
-            if kind == "state":
-                store[:, slot] = payload[i]
-                nbytes += payload[i].nbytes
-                i += 1
-        return nbytes
 
 
 class LLMEngine:
@@ -181,17 +85,28 @@ class LLMEngine:
         self.bm = BlockManager(self.cfg.num_blocks, self.cfg.block_size,
                                self.cfg.num_state_slots)
         self.store = PagedModelState(model, self.cfg)
+        self.runner, self.paged_runner = make_runners(model, params, self.cfg,
+                                                      self.store)
         self.prefix_cache = PrefixCache(self.bm,
                                         host_capacity_blocks=self.cfg.host_cache_blocks) \
             if self.cfg.enable_prefix_cache else None
         self.seqs: Dict[str, SeqState] = {}
         self.finished: List[RequestMetrics] = []
         self._rng = jax.random.PRNGKey(self.cfg.seed)
-        self._extend_jit = jax.jit(model.extend)
         self.host_transfer_bytes = 0
         self.steps = 0
         self.exact_chunks = sched_cfg.exact_chunks
         self._step_inflight: Optional[set] = None
+
+    @property
+    def host_copy_bytes(self) -> int:
+        """Gather/scatter window-staging traffic (the paged path's saving)."""
+        return self.store.host_copy_bytes
+
+    @property
+    def paged_steps(self) -> int:
+        """Batches executed on the paged backend."""
+        return self.paged_runner.steps if self.paged_runner is not None else 0
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> SeqState:
@@ -236,7 +151,7 @@ class LLMEngine:
                    protected: Optional[set] = None) -> None:
         """Grow seq's block table; on pressure, evict prefix-cache blocks then
         preempt running sequences — but never one in the current batch group
-        (``protected``), whose pages are about to be gathered."""
+        (``protected``), whose pages this step will read."""
         while True:
             try:
                 self.bm.ensure_capacity(seq.block_table, target_tokens)
@@ -274,10 +189,10 @@ class LLMEngine:
             seq.state_slot = None
 
     # ------------------------------------------------------------------
-    def _run_group(self, chunks: List[ChunkWork]) -> None:
-        """Run one jitted extend over a group of chunks (uniform C if exact)."""
+    def _run_group(self, chunks: List[ChunkWork], runner: ModelRunner) -> None:
+        """Allocate for a group of chunks, execute it on ``runner``, sample."""
         # allocation pass first: a preemption victim must never be a sequence
-        # whose pages this step is about to gather (any group of the plan)
+        # whose pages this step is about to read (any group of the plan)
         inflight = self._step_inflight or {c.seq.request_id for c in chunks}
         ready: List[ChunkWork] = []
         for ch in chunks:
@@ -291,44 +206,17 @@ class LLMEngine:
                 # cannot fit this chunk even after evictions: self-preempt and
                 # let the scheduler retry once memory frees up
                 self._do_preempt(ch.seq)
-        chunks = ready
-        if not chunks:
+        if not ready:
             return
-        B = len(chunks)
-        C = max(c.length for c in chunks)
-        W = self.cfg.max_model_len
+        batch = marshal_batch(ready, self.cfg.block_size, self.cfg.max_model_len)
+        if not runner.supports(batch):
+            runner = self.runner  # gathered fallback (e.g. extras in a decode)
+        logits_np = runner.execute(batch)
+        self._postprocess(ready, logits_np)
+
+    def _postprocess(self, chunks: List[ChunkWork], logits_np: np.ndarray) -> None:
+        """Sampling, prefix-cache publication, accounting, stop conditions."""
         bs = self.cfg.block_size
-        nmax = W // bs
-        tokens = np.zeros((B, C), np.int32)
-        cache_lens = np.zeros((B,), np.int32)
-        tables = np.zeros((B, nmax), np.int64)
-        slots = np.zeros((B,), np.int64)
-        extras: Dict[str, Any] = {}
-        for b, ch in enumerate(chunks):
-            seq = ch.seq
-            toks = seq.all_tokens
-            tokens[b, : ch.length] = toks[ch.start: ch.start + ch.length]
-            cache_lens[b] = ch.start
-            tb = seq.block_table[:nmax]
-            tables[b, : len(tb)] = tb
-            slots[b] = seq.state_slot if seq.state_slot is not None else 0
-            ext = getattr(seq.request, "extras", None)
-            if ext and seq.num_computed == 0 and ch.start == 0:
-                for k, v in ext.items():
-                    extras.setdefault(k, []).append(v)
-        batch_extras = None
-        if extras:
-            batch_extras = {k: jnp.asarray(np.stack(v)) for k, v in extras.items()}
-            if len(next(iter(extras.values()))) != B:
-                batch_extras = None  # mixed first/non-first chunks: unsupported mix
-        cache = self.store.gather(tables, slots)
-        logits, new_cache = self._extend_jit(self.params, jnp.asarray(tokens), cache,
-                                             jnp.asarray(cache_lens),
-                                             batch=batch_extras)
-        self.store.scatter(new_cache, tables, slots,
-                           [c.start for c in chunks], [c.length for c in chunks],
-                           quant=self.cfg.kv_quant)
-        logits_np = np.asarray(logits.astype(jnp.float32))
         now = time.time()
         for b, ch in enumerate(chunks):
             seq = ch.seq
@@ -400,14 +288,22 @@ class LLMEngine:
         self.steps += 1
         self._step_inflight = {c.seq.request_id for c in plan.chunks}
         try:
-            if self.exact_chunks:
-                by_len: Dict[int, List[ChunkWork]] = {}
-                for c in plan.chunks:
-                    by_len.setdefault(c.length, []).append(c)
-                for _, group in sorted(by_len.items()):
-                    self._run_group(group)
+            if self.paged_runner is not None and plan.decode:
+                # decode-path specialization: decodes run on the paged
+                # backend, prompt chunks (if any) on the gathered reference
+                self._run_group(plan.decode, self.paged_runner)
+                rest = plan.prefill
             else:
-                self._run_group(plan.chunks)
+                rest = plan.chunks  # SplitFuse unified batch
+            if rest:
+                if self.exact_chunks:
+                    by_len: Dict[int, List[ChunkWork]] = {}
+                    for c in rest:
+                        by_len.setdefault(c.length, []).append(c)
+                    for _, group in sorted(by_len.items()):
+                        self._run_group(group, self.runner)
+                else:
+                    self._run_group(rest, self.runner)
         finally:
             self._step_inflight = None
         return plan.num_tokens

@@ -1,0 +1,38 @@
+"""Pluggable execution backends for the serving engine (see docs/executors.md).
+
+``make_runners`` wires the backends for a model/config pair:
+  * GatheredRunner always exists — the correctness reference, and the only
+    path for prefill and for model families the paged path doesn't cover.
+  * PagedRunner exists when the stack is pure global attention
+    (``paged_decode_supported``), KV-quant-at-rest is off, and the
+    ``execution_backend`` config allows it.
+"""
+from repro.core.executor.base import ExecBatch, ModelRunner, marshal_batch  # noqa: F401
+from repro.core.executor.gathered import GatheredRunner  # noqa: F401
+from repro.core.executor.paged import PagedRunner  # noqa: F401
+from repro.core.executor.state import PagedModelState  # noqa: F401
+
+
+def make_runners(model, params, engine_cfg, store):
+    """Returns (gathered, paged_or_None) per the engine config's
+    ``execution_backend``: "auto" | "gathered" | "paged"."""
+    backend = getattr(engine_cfg, "execution_backend", "auto")
+    if backend not in ("auto", "gathered", "paged"):
+        raise ValueError(f"unknown execution_backend: {backend!r}")
+    impl = getattr(engine_cfg, "paged_impl", "auto")
+    if impl not in ("auto", "pallas", "interpret", "ref"):
+        # fail at construction, not mid-serving inside the kernel dispatch
+        raise ValueError(f"unknown paged_impl: {impl!r}")
+    gathered = GatheredRunner(model, params, engine_cfg, store)
+    paged = None
+    eligible = (model.decode_paged is not None
+                and engine_cfg.kv_quant is None
+                and store.attn_kv_leaves()
+                and "state" not in store.kinds)
+    if backend in ("auto", "paged") and eligible:
+        paged = PagedRunner(model, params, engine_cfg, store)
+    if backend == "paged" and paged is None:
+        raise ValueError(
+            "execution_backend='paged' but the model has no paged decode "
+            "path (needs a pure global-attention stack, no kv_quant)")
+    return gathered, paged

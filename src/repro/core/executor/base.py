@@ -1,0 +1,86 @@
+"""ModelRunner: the execution-backend interface of the serving engine.
+
+The engine owns *policy* — admission, scheduling, block allocation, CoW,
+prefix caching, sampling, metrics. A runner owns *mechanism*: given a batch
+of scheduled chunks whose blocks are already allocated, execute the model
+and return per-chunk logits, updating the KV stores however its backend
+likes (vLLM/SGLang-style engine/runner layering).
+
+Backends:
+  * GatheredRunner — stage a dense (B, W) cache window per step, run
+    ``model.extend``, scatter written positions back. Handles every model
+    family (prefill, chunked prefill, state mixers, MLA, enc-dec).
+  * PagedRunner — decode-only specialization: block tables + lengths go
+    straight into ``model.decode_paged`` which runs the Pallas
+    paged-attention op against device-resident page stores; only the new
+    token's K/V is written. No (B, W) gather, no full-window scatter.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import ChunkWork
+
+
+@dataclasses.dataclass
+class ExecBatch:
+    """Marshalled per-step batch shared by runners.
+
+    tokens: (B, C) int32; cache_lens: (B,) tokens already cached per seq;
+    tables: (B, nmax) block ids; slots: (B,) state slots (0 when unused)."""
+    chunks: List[ChunkWork]
+    tokens: np.ndarray
+    cache_lens: np.ndarray
+    tables: np.ndarray
+    slots: np.ndarray
+    extras: Optional[dict] = None
+
+
+def marshal_batch(chunks: List[ChunkWork], block_size: int,
+                  max_model_len: int) -> ExecBatch:
+    """Pack scheduled chunks into dense host arrays (the jit boundary)."""
+    B = len(chunks)
+    C = max(c.length for c in chunks)
+    nmax = max_model_len // block_size
+    tokens = np.zeros((B, C), np.int32)
+    cache_lens = np.zeros((B,), np.int32)
+    tables = np.zeros((B, nmax), np.int64)
+    slots = np.zeros((B,), np.int64)
+    extras = {}
+    for b, ch in enumerate(chunks):
+        seq = ch.seq
+        toks = seq.all_tokens
+        tokens[b, : ch.length] = toks[ch.start: ch.start + ch.length]
+        cache_lens[b] = ch.start
+        tb = seq.block_table[:nmax]
+        tables[b, : len(tb)] = tb
+        slots[b] = seq.state_slot if seq.state_slot is not None else 0
+        ext = getattr(seq.request, "extras", None)
+        if ext and seq.num_computed == 0 and ch.start == 0:
+            for k, v in ext.items():
+                extras.setdefault(k, []).append(v)
+    batch_extras = None
+    if extras:
+        batch_extras = {k: np.stack(v) for k, v in extras.items()}
+        if len(next(iter(extras.values()))) != B:
+            batch_extras = None  # mixed first/non-first chunks: unsupported mix
+    return ExecBatch(chunks=chunks, tokens=tokens, cache_lens=cache_lens,
+                     tables=tables, slots=slots, extras=batch_extras)
+
+
+class ModelRunner(abc.ABC):
+    """Executes one marshalled batch; returns logits (B, C, V) float32."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def execute(self, batch: ExecBatch) -> np.ndarray:
+        ...
+
+    def supports(self, batch: ExecBatch) -> bool:
+        """Whether this runner can execute the batch (checked by dispatch)."""
+        return True

@@ -1,0 +1,44 @@
+"""GatheredRunner: the gather -> ``model.extend`` -> scatter reference backend.
+
+Each step gathers the scheduled sequences' pages into a dense (B, W) cache
+window (numpy memcpy on CPU), runs the jitted ``model.extend`` (decodes are
+chunks of length 1 — SplitFuse unified batching), then scatters the newly
+written positions back to their pages. This is the correctness reference and
+the only path for prefill, state-mixer models (Mamba/xLSTM/whisper), MLA,
+and KV-quantized stores; all window-staging traffic it generates is charged
+to ``PagedModelState.host_copy_bytes``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.state import PagedModelState
+
+
+class GatheredRunner(ModelRunner):
+    name = "gathered"
+
+    def __init__(self, model, params, engine_cfg, store: PagedModelState):
+        self.model = model
+        self.params = params
+        self.cfg = engine_cfg
+        self.store = store
+        self._extend_jit = jax.jit(model.extend)
+
+    def execute(self, batch: ExecBatch) -> np.ndarray:
+        chunks = batch.chunks
+        extras = None
+        if batch.extras is not None:
+            extras = {k: jnp.asarray(v) for k, v in batch.extras.items()}
+        cache = self.store.gather(batch.tables, batch.slots)
+        logits, new_cache = self._extend_jit(
+            self.params, jnp.asarray(batch.tokens), cache,
+            jnp.asarray(batch.cache_lens), batch=extras)
+        self.store.scatter(new_cache, batch.tables, batch.slots,
+                           [c.start for c in chunks],
+                           [c.length for c in chunks],
+                           quant=self.cfg.kv_quant)
+        return np.asarray(logits.astype(jnp.float32))

@@ -1,0 +1,154 @@
+"""PagedRunner: decode straight on block-indexed page stores (no gather).
+
+The hot path the survey's §III.A/§IV.A machinery exists for: a pure-decode
+step passes block tables + lengths into ``model.decode_paged``, which runs
+the Pallas paged-attention op per layer against device-resident page stores
+in kernel layout (KV, NB, P, D) and writes the single new token's K/V in
+place under buffer donation. Zero dense (B, W) KV staging; the only host
+traffic is the O(tokens) new-KV writeback that keeps the host-authoritative
+``PagedModelState`` coherent for CoW / prefix-cache payloads / migration
+(on a TPU-real backend that writeback disappears with the host store).
+
+Mirror coherency: any engine-side page mutation (prefill scatter, CoW copy,
+host-tier restore) bumps ``store.version`` and records dirty block ids; the
+next paged step re-uploads just those blocks (full re-upload when most of
+the pool is dirty). In steady decode-only phases nothing is uploaded at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.state import PagedModelState
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_blocks(leaf, blocks, payload):
+    """In-place per-block mirror update: leaf (KV, NB, P, D),
+    blocks (n,), payload (KV, n, P, D)."""
+    return leaf.at[:, blocks].set(payload)
+
+
+def _pad_pow2(blocks: np.ndarray) -> np.ndarray:
+    """Pad the dirty-block list to a pow2 length (repeat first id — duplicate
+    writes of identical payloads are idempotent) to bound jit cache size."""
+    n = 1
+    while n < len(blocks):
+        n *= 2
+    return np.concatenate([blocks, np.repeat(blocks[:1], n - len(blocks))])
+
+
+class PagedRunner(ModelRunner):
+    name = "paged"
+
+    def __init__(self, model, params, engine_cfg, store: PagedModelState):
+        assert model.decode_paged is not None, "model has no paged decode path"
+        self.model = model
+        self.params = params
+        self.cfg = engine_cfg
+        self.store = store
+        self.leaves = store.attn_kv_leaves()
+        assert self.leaves and "state" not in store.kinds, \
+            "paged decode needs a pure attention-K/V cache"
+        self._decode_jit = jax.jit(model.decode_paged,
+                                   static_argnames=("impl",),
+                                   donate_argnums=(2,))
+        self._pages: Optional[Tuple[Dict[str, Any], ...]] = None
+        self._synced_version = -1
+        # telemetry: what replaced host_copy_bytes on this path
+        self.mirror_upload_bytes = 0
+        self.writeback_bytes = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def _leaf_kernel_layout(self, idx: int, r: int,
+                            blocks: Optional[np.ndarray] = None) -> np.ndarray:
+        """(NB|n, bs, KV, D) slice of store leaf -> kernel (KV, NB|n, bs, D)."""
+        arr = self.store.stores[idx][r]
+        if blocks is not None:
+            arr = arr[blocks]
+        return np.ascontiguousarray(np.transpose(arr, (2, 0, 1, 3)))
+
+    def sync(self) -> None:
+        """Bring the device mirror up to date with the host store."""
+        if self._pages is not None and self._synced_version == self.store.version:
+            return
+        dirty = np.asarray(sorted(self.store.dirty_blocks), np.int32)
+        num_blocks = self.cfg.num_blocks
+        full = self._pages is None or len(dirty) > num_blocks // 2
+        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
+        if full:
+            pages: List[Dict[str, Any]] = [
+                {f"r{r}": {} for r in range(reps[si])}
+                for si in range(len(self.model.cfg.stages))]
+            for (si, lkey, name, idx) in self.leaves:
+                for r in range(reps[si]):
+                    leaf = self._leaf_kernel_layout(idx, r)
+                    self.mirror_upload_bytes += leaf.nbytes
+                    pages[si][f"r{r}"].setdefault(lkey, {})[name] = \
+                        jnp.asarray(leaf)
+            self._pages = tuple(pages)
+        elif len(dirty):
+            blocks = _pad_pow2(dirty)
+            blocks_j = jnp.asarray(blocks)
+            # rebuild containers (leaves shared) so in-place edits are safe
+            pages = jax.tree.map(lambda x: x, list(self._pages))
+            try:
+                for (si, lkey, name, idx) in self.leaves:
+                    for r in range(reps[si]):
+                        payload = self._leaf_kernel_layout(idx, r, blocks)
+                        self.mirror_upload_bytes += payload.nbytes
+                        pages[si][f"r{r}"][lkey][name] = _write_blocks(
+                            pages[si][f"r{r}"][lkey][name], blocks_j,
+                            jnp.asarray(payload))
+            except Exception:
+                # earlier leaves were already donated into _write_blocks;
+                # drop the half-updated mirror so the next sync re-uploads
+                self._pages = None
+                self._synced_version = -1
+                raise
+            self._pages = tuple(pages)
+        self.store.dirty_blocks.clear()
+        self._synced_version = self.store.version
+
+    # ------------------------------------------------------------------
+    def supports(self, batch: ExecBatch) -> bool:
+        return (batch.extras is None
+                and all(c.length == 1 for c in batch.chunks))
+
+    def execute(self, batch: ExecBatch) -> np.ndarray:
+        assert self.supports(batch)
+        self.sync()
+        lengths = batch.cache_lens  # decode: start == tokens already cached
+        try:
+            logits, new_pages, writes = self._decode_jit(
+                self.params, jnp.asarray(batch.tokens), self._pages,
+                jnp.asarray(batch.tables), jnp.asarray(lengths),
+                impl=self.cfg.paged_impl)
+        except Exception:
+            # self._pages was donated into the failed call and may now hold
+            # deleted buffers; drop the mirror so the next step re-uploads
+            self._pages = None
+            self._synced_version = -1
+            raise
+        self._pages = new_pages
+        # O(token) writeback keeps the host store authoritative; the device
+        # mirror already holds the same write (done in-place by decode_paged)
+        bs = self.cfg.block_size
+        B = len(batch.chunks)
+        blk = batch.tables[np.arange(B), lengths // bs].astype(np.int64)
+        off = (lengths % bs).astype(np.int64)
+        writes_np = jax.device_get(writes)
+        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
+        for (si, lkey, name, idx) in self.leaves:
+            payload = np.stack([writes_np[si][f"r{r}"][lkey][name]
+                                for r in range(reps[si])])
+            self.writeback_bytes += self.store.write_token(idx, blk, off,
+                                                           payload)
+        self.steps += 1
+        return np.asarray(logits.astype(jnp.float32))

@@ -1,0 +1,200 @@
+"""Physical page/state stores backing the serving engine.
+
+``PagedModelState`` owns the host-authoritative arrays: per-layer paged K/V
+page stores (block-indexed, the layout the Pallas paged-attention kernel
+consumes) and fixed-size state slots (SSM/xLSTM/whisper cross-KV). Runners
+(see ``executor/gathered.py`` / ``executor/paged.py``) decide how the model
+reads them:
+
+  * the gathered path stages a dense (B, W) cache window per step — every
+    byte moved is charged to ``host_copy_bytes``;
+  * the paged path reads pages in place through block tables and only writes
+    the single new token's K/V back (O(tokens), not O(window)).
+
+Mutations bump ``version`` and record the touched block ids in
+``dirty_blocks`` so device-resident mirrors (PagedRunner) can invalidate or
+incrementally re-sync instead of re-uploading the whole store.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv_quant import QuantConfig, dequantize, quantize
+
+
+class PagedModelState:
+    """Physical page/state stores matching the model's cache pytree."""
+
+    def __init__(self, model, engine_cfg):
+        self.model = model
+        self.cfg = engine_cfg
+        B, W = 1, engine_cfg.max_model_len
+        template = jax.eval_shape(lambda: model.init_cache(B, W))
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        paths = jax.tree_util.tree_flatten_with_path(template)[0]
+        self.paths = [p for p, _ in paths]
+        self.kinds: List[str] = []
+        self.stores: List[np.ndarray] = []
+        bs = engine_cfg.block_size
+        for (path, leaf) in paths:
+            shape = leaf.shape
+            # stage leaves are (R, B, ...); paged iff the post-batch axis == W
+            if len(shape) >= 3 and shape[1] == B and shape[2] == W:
+                self.kinds.append("paged")
+                self.stores.append(np.zeros(
+                    (shape[0], engine_cfg.num_blocks, bs) + tuple(shape[3:]),
+                    dtype=leaf.dtype))
+            else:
+                self.kinds.append("state")
+                self.stores.append(np.zeros(
+                    (shape[0], engine_cfg.num_state_slots) + tuple(shape[2:]),
+                    dtype=leaf.dtype))
+        # gather/scatter window-staging traffic (the cost the paged path kills)
+        self.host_copy_bytes = 0
+        # mirror-coherency bookkeeping (consumed by PagedRunner.sync)
+        self.version = 0
+        self.dirty_blocks: Set[int] = set()
+
+    # ------------------------------------------------------------------
+    def _touch(self, blocks) -> None:
+        self.version += 1
+        self.dirty_blocks.update(int(b) for b in np.atleast_1d(blocks))
+
+    # ------------------------------------------------------------------
+    def gather(self, tables: np.ndarray, slots: np.ndarray):
+        """tables: (B, nmax) int block ids; slots: (B,) int state slots.
+        Returns the model cache pytree with leaves (R, B, W, ...) / (R, B, ...)."""
+        out = []
+        W = self.cfg.max_model_len
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                g = store[:, tables]  # (R, B, nmax, bs, ...)
+                R, B, nb, bs = g.shape[:4]
+                win = g.reshape((R, B, nb * bs) + g.shape[4:])[:, :, :W]
+                self.host_copy_bytes += win.nbytes
+                out.append(jnp.asarray(win))
+            else:
+                sl = store[:, slots]
+                self.host_copy_bytes += sl.nbytes
+                out.append(jnp.asarray(sl))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def scatter(self, new_cache, tables: np.ndarray, slots: np.ndarray,
+                starts: List[int], lengths: List[int],
+                quant: Optional[QuantConfig] = None) -> None:
+        """Write back the positions [starts[b], starts[b]+lengths[b]) per seq."""
+        bs = self.cfg.block_size
+        leaves = jax.tree_util.tree_flatten(new_cache)[0]
+        touched: Set[int] = set()
+        for kind, store, leaf in zip(self.kinds, self.stores, leaves):
+            arr = np.asarray(leaf)
+            if kind == "paged":
+                for b, (st, ln) in enumerate(zip(starts, lengths)):
+                    if ln <= 0:
+                        continue
+                    pos = np.arange(st, st + ln)
+                    blk = tables[b, pos // bs]
+                    off = pos % bs
+                    payload = arr[:, b, pos]
+                    if quant is not None:
+                        # KIVI quantize-at-rest roundtrip (layout unchanged;
+                        # packed int pages are the Pallas kernel's concern)
+                        axis = "channel" if payload.ndim >= 3 else "token"
+                        codes, scale, zero = quantize(jnp.asarray(payload),
+                                                      quant.bits, axis)
+                        payload = np.asarray(dequantize(codes, scale, zero),
+                                             dtype=arr.dtype)
+                    store[:, blk, off] = payload
+                    self.host_copy_bytes += payload.nbytes
+                    touched.update(int(x) for x in np.unique(blk))
+            else:
+                for b, ln in enumerate(lengths):
+                    if ln <= 0:
+                        continue
+                    store[:, slots[b]] = arr[:, b]
+                    self.host_copy_bytes += arr[:, b].nbytes
+        if touched:
+            self._touch(list(touched))
+        else:
+            self.version += 1
+
+    # ------------------------------------------------------------------
+    def write_token(self, leaf_idx: int, blocks: np.ndarray, offsets: np.ndarray,
+                    payload: np.ndarray) -> int:
+        """Paged-path writeback: one token per sequence into store ``leaf_idx``.
+
+        blocks/offsets: (B,); payload: (R, B, ...) per-repeat new-token values.
+        Keeps the host store authoritative for CoW / export / prefix-cache
+        payloads without staging any window. Returns bytes written. Does NOT
+        dirty the mirror — the caller's device mirror already holds the same
+        write (it was applied in-place by ``decode_paged``)."""
+        store = self.stores[leaf_idx]
+        store[:, blocks, offsets] = payload
+        return payload.nbytes
+
+    def copy_block(self, src: int, dst: int) -> None:
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                store[:, dst] = store[:, src]
+        self._touch([dst])
+
+    def block_payload(self, block: int):
+        """Serialize one block's pages across layers (host-tier demotion)."""
+        return [store[:, block].copy() for kind, store in
+                zip(self.kinds, self.stores) if kind == "paged"]
+
+    def restore_block(self, block: int, payload) -> int:
+        i = 0
+        nbytes = 0
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "paged":
+                store[:, block] = payload[i]
+                nbytes += payload[i].nbytes
+                i += 1
+        self._touch([block])
+        return nbytes
+
+    def kv_bytes_per_block(self) -> int:
+        return sum(int(np.prod(s.shape[2:])) * s.dtype.itemsize * s.shape[0]
+                   for k, s in zip(self.kinds, self.stores) if k == "paged")
+
+    def state_payload(self, slot: int):
+        return [store[:, slot].copy() for kind, store in
+                zip(self.kinds, self.stores) if kind == "state"]
+
+    def restore_state(self, slot: int, payload) -> int:
+        i = 0
+        nbytes = 0
+        for kind, store in zip(self.kinds, self.stores):
+            if kind == "state":
+                store[:, slot] = payload[i]
+                nbytes += payload[i].nbytes
+                i += 1
+        self.version += 1
+        return nbytes
+
+    # ------------------------------------------------------------------
+    def attn_kv_leaves(self) -> List[Tuple[int, str, str, int]]:
+        """(stage, layer key, "k"/"v", leaf index) for every paged attention
+        K/V leaf, parsed from the cache pytree paths.
+
+        Layout invariant used by PagedRunner: such a store leaf has shape
+        (R, NB, bs, KV, D). Returns [] when any paged leaf is NOT a plain
+        attention k/v (MLA latents etc.) so callers fall back to gathering."""
+        out = []
+        for idx, (path, kind) in enumerate(zip(self.paths, self.kinds)):
+            if kind != "paged":
+                continue
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            # expected path: ("stages", si, "l{i}", "k"|"v")
+            if (len(keys) == 4 and keys[0] == "stages"
+                    and str(keys[3]) in ("k", "v")
+                    and self.stores[idx].ndim == 5):
+                out.append((int(keys[1]), str(keys[2]), str(keys[3]), idx))
+            else:
+                return []
+        return out

@@ -39,7 +39,19 @@ class ChunkWork:
 
 @dataclasses.dataclass
 class StepPlan:
-    chunks: List[ChunkWork]  # unified batch: decode seqs have length == 1
+    """One step's work, split by execution path.
+
+    ``decode`` chunks (length 1, sequence past prefill) can run on a
+    decode-specialized backend straight off the paged KV stores; ``prefill``
+    chunks always take the gathered path. ``chunks`` is the unified
+    decode-first view (SplitFuse order) used when a single backend runs the
+    whole step."""
+    decode: List[ChunkWork] = dataclasses.field(default_factory=list)
+    prefill: List[ChunkWork] = dataclasses.field(default_factory=list)
+
+    @property
+    def chunks(self) -> List[ChunkWork]:
+        return self.decode + self.prefill
 
     @property
     def num_tokens(self) -> int:
@@ -100,6 +112,7 @@ class Scheduler:
 
     def plan(self, now: float = 0.0) -> StepPlan:
         cfg = self.cfg
+        decode_chunks: List[ChunkWork] = []
         chunks: List[ChunkWork] = []
         budget = cfg.max_batched_tokens
         slots = cfg.max_batch_slots
@@ -110,7 +123,7 @@ class Scheduler:
         # num_computed (== total_len - 1)
         decoding = sorted([s for s in self.running if not s.in_prefill], key=key)
         for s in decoding[:slots]:
-            chunks.append(ChunkWork(s, s.num_computed, 1))
+            decode_chunks.append(ChunkWork(s, s.num_computed, 1))
             budget -= 1
             slots -= 1
 
@@ -148,4 +161,4 @@ class Scheduler:
             chunks.append(ChunkWork(s, s.num_computed, want))
             budget -= want
             slots -= 1
-        return StepPlan(chunks=chunks)
+        return StepPlan(decode=decode_chunks, prefill=chunks)

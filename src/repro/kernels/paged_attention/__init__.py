@@ -1,2 +1,5 @@
-from repro.kernels.paged_attention.ops import paged_decode_attention  # noqa: F401
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attend,
+    paged_decode_attention,
+)
 from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: F401

@@ -1,4 +1,14 @@
-"""Jit'd entry point for paged decode attention with backend dispatch."""
+"""Jit'd entry points for paged decode attention with backend dispatch.
+
+Two call layouts:
+  * ``paged_decode_attention`` — kernel layout: q (B, KV, G, D), pages
+    (KV, NB, P, D), per-sequence batched block tables (B, NP).
+  * ``paged_attend`` — model layout: q (B, 1, H, D) as produced by the
+    attention projections, same batched tables/lengths the engine keeps per
+    sequence. This is what ``models.attention.attn_decode_paged`` calls; it
+    normalizes index dtypes (engine tables are host int64) and regroups heads
+    into (KV, G) GQA order.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,14 +20,38 @@ from repro.kernels.paged_attention.paged_attention import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "impl"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
                            scale: float, impl: str = "auto"):
     """impl: 'pallas' (TPU), 'interpret' (Pallas-on-CPU validation), 'ref'."""
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    impl = _resolve(impl)
     if impl == "ref":
         return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
                                    scale=scale)
     return paged_attention(q, k_pages, v_pages, block_tables, lengths,
                            scale=scale, interpret=(impl == "interpret"))
+
+
+def paged_attend(q, k_pages, v_pages, block_tables, lengths, *, scale: float,
+                 impl: str = "auto"):
+    """Model-layout adapter: q (B, 1, H, D) -> out (B, 1, H, D).
+
+    k_pages/v_pages: (KV, NB, P, D); block_tables: (B, NP) any int dtype;
+    lengths: (B,) valid tokens INCLUDING the one being decoded (matching
+    ``decode_attention``'s total_len convention). Heads are grouped
+    (KV, G = H // KV) consecutively, the same convention as
+    ``models.attention.decode_attention``."""
+    B, _, H, D = q.shape
+    KV = k_pages.shape[0]
+    G = H // KV
+    qr = q.reshape(B, KV, G, D)
+    out = paged_decode_attention(
+        qr, k_pages, v_pages, block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), scale=scale, impl=impl)
+    return out.reshape(B, 1, H, D)

@@ -155,6 +155,20 @@ class HloCost:
         return sum(self.collectives.values())
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Version-compat accessor for ``compiled.cost_analysis()``.
+
+    Older JAX returns a per-device *list* of dicts (one per addressable
+    device), newer JAX returns the dict directly; either may be empty. This
+    is the raw XLA analysis that visits a while-loop body ONCE — the very
+    undercount ``analyze_hlo`` exists to correct — exposed so callers can
+    compare against it without caring about the JAX version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze_hlo(hlo: str) -> HloCost:
     comps, entry = _parse(hlo)
     if entry is None:

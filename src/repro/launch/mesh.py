@@ -3,11 +3,26 @@
 Functions, not module-level constants: importing this module never touches jax
 device state (device count is locked at first jax init — dryrun.py must set
 XLA_FLAGS before any jax import).
+
+``jax.sharding.AxisType`` only exists on newer JAX; on older versions
+``jax.make_mesh`` has no ``axis_types`` parameter and every axis is
+implicitly Auto, so the fallback simply omits the argument.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # older JAX: no explicit axis types (all axes Auto)
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """Version-portable jax.make_mesh (axes implicitly Auto on older JAX)."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,11 +30,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips (pod axis over DCN/ICI)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for unit tests (uses however many host devices exist)."""
-    axes = ("data", "model")
-    return jax.make_mesh((n_data, n_model), axes,
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-32b", choices=list(configs.ARCHS))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--policy", default="fcfs", choices=["fcfs", "vtc", "qoe"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "gathered", "paged"],
+                    help="execution backend (docs/executors.md)")
     ap.add_argument("--debug", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -36,6 +39,7 @@ def main():
     params, _ = split_params(model.init(jax.random.PRNGKey(0), max_seq=512))
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
+        execution_backend=args.backend,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -52,7 +56,9 @@ def main():
     dt = time.time() - t0
     gen = sum(m.num_generated for m in metrics)
     print(f"{args.arch}: {len(metrics)} requests, {gen} tokens, "
-          f"{gen/dt:.1f} tok/s, {engine.steps} steps, "
+          f"{gen/dt:.1f} tok/s, {engine.steps} steps "
+          f"({engine.paged_steps} paged), "
+          f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
           f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms")
 
 

@@ -1,2 +1,2 @@
-from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.model import Model, build_model, paged_decode_supported  # noqa: F401
 from repro.models.common import Param, split_params, param_axes_tree  # noqa: F401

@@ -295,7 +295,8 @@ def decode_attention_cp(q, k_cache, v_cache, total_len, *, axes, mesh,
     # manual over ALL mesh axes (others fully replicated in the specs):
     # a partially-auto mesh leaves lax.axis_index -> partition-id ambiguous
     # for the SPMD partitioner
-    return _jax.shard_map(
+    from repro.sharding import shard_map
+    return shard_map(
         local, mesh=mesh, axis_names=set(mesh.axis_names),
         in_specs=(P(), P(None, axes, None, None), P(None, axes, None, None), P()),
         out_specs=P(), check_vma=False)(q, k_cache, v_cache, total_len)
@@ -395,6 +396,45 @@ def attn_decode(p, cfg, spec, x, cache, cache_len):
                                scale=scale)
     out = proj_out(p["wo"], out)
     return out, {"k": k_cache, "v": v_cache}
+
+
+def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
+                      impl: str = "auto"):
+    """One-token decode directly against block-indexed page stores.
+
+    x: (B, 1, d); pages: {"k","v"}: (KV, NB, P, D) — the engine's physical
+    page stores, NOT a gathered window; block_tables: (B, NP) block ids;
+    lengths: (B,) valid tokens BEFORE this one. The new token's K/V is
+    written in place into page [lengths // P, lengths % P] (an in-place
+    dynamic-update-slice under buffer donation), then the paged-attention
+    op attends over the block table. Only global attention: window/chunked
+    masking takes the gathered path (masks are position-dense; a windowed
+    paged read needs table slicing the kernel does not do yet).
+
+    Returns (out, new_pages, (k_new, v_new)) — the per-token K/V is handed
+    back so the host-authoritative store can apply the same O(token) write.
+    """
+    from repro.kernels.paged_attention import paged_attend
+
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    pos = lengths.astype(jnp.int32)
+    use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    P = pages["k"].shape[2]
+    blk = block_tables[jnp.arange(B), pos // P]  # (B,)
+    off = pos % P
+    k_new = k[:, 0].astype(pages["k"].dtype)  # (B, KV, D)
+    v_new = v[:, 0].astype(pages["v"].dtype)
+    k_pages = pages["k"].at[:, blk, off].set(jnp.swapaxes(k_new, 0, 1))
+    v_pages = pages["v"].at[:, blk, off].set(jnp.swapaxes(v_new, 0, 1))
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    out = paged_attend(q, k_pages, v_pages, block_tables, pos + 1,
+                       scale=scale, impl=impl)
+    out = proj_out(p["wo"], out)
+    return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
 def init_attn_cache(cfg, batch, max_seq, dtype):

@@ -257,6 +257,29 @@ def _layer_decode(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
     return x, new_cache
 
 
+def _layer_decode_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
+                        impl: str = "auto"):
+    """One-token decode with attention running directly on page stores."""
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    y, new_pages, kv_new = attn.attn_decode_paged(
+        p["mixer"], cfg, spec, h, pages, block_tables, lengths, impl=impl)
+    x = x + y
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    return x, new_pages, kv_new
+
+
+def paged_decode_supported(cfg: ModelConfig) -> bool:
+    """Whether ``decode_paged`` covers this stack: every mixer must be plain
+    global attention. MLA (latent pages), window/chunked attention (dense
+    positional masks), recurrent mixers (state slots, no pages) and enc-dec
+    (cross-KV state) take the gathered path — explicit fallback, not silent
+    wrong answers."""
+    if cfg.family == "audio":
+        return False
+    return all(s.mixer == "attn" and s.attn_kind == "global"
+               for p, _ in cfg.stages for s in p)
+
+
 def _layer_cache(spec, cfg, batch, max_seq, dtype, window_ring=False):
     if spec.mixer == "attn":
         if window_ring and spec.attn_kind == "window" and cfg.sliding_window:
@@ -285,6 +308,7 @@ class Model(NamedTuple):
     extend: Callable
     decode: Callable
     init_cache: Callable
+    decode_paged: Optional[Callable] = None  # only when paged_decode_supported
 
 
 def _stack_layers_axis(tree):
@@ -618,5 +642,52 @@ def build_model(cfg: ModelConfig) -> Model:
         new_cache = dict(cache, stages=tuple(new_stages))
         return logits, new_cache
 
+    # ---------------- decode_paged (one token, no gathered window) ------------
+    def decode_paged(params, tokens, pages, block_tables, lengths, *,
+                     impl: str = "auto"):
+        """tokens: (B, 1); pages: tuple over stages of
+        {"r{r}": {"l{i}": {"k","v"}}} with leaves (KV, NB, P, D) — the
+        engine's physical page stores in kernel layout; block_tables:
+        (B, NP) block ids shared by every layer; lengths: (B,) valid tokens
+        before this one.
+
+        The layer loop is UNROLLED (unstacked pages, like decode's
+        "r0"/"r1" cache layout) so each page store is a separately-donated
+        buffer and the one-token write is an in-place dynamic-update-slice —
+        a scanned page store would be threaded xs->ys and copied whole every
+        step (see init_cache). Returns (logits, new_pages, kv_writes) where
+        kv_writes mirrors pages with leaves (B, KV, D): the new token's K/V,
+        for the host-authoritative store writeback."""
+        x = embed_tokens(params, tokens)
+        if cfg.learned_positions:
+            size = params["pos_embed"].shape[0]
+            pos = jnp.clip(lengths, 0, size - 1)
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(dtype)
+        x = lconstraint(x, ("batch", None, "embed"))
+        new_stages = []
+        writes = []
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_p = params["stages"][si]
+            new_stage = {}
+            w_stage = {}
+            for r in range(reps):
+                p_r = jax.tree.map(lambda a: a[r], stage_p)
+                new_c = {}
+                w_c = {}
+                for i, spec in enumerate(pattern):
+                    x, nc, kv_new = _layer_decode_paged(
+                        p_r[f"l{i}"], spec, cfg, x,
+                        pages[si][f"r{r}"][f"l{i}"], block_tables, lengths,
+                        impl=impl)
+                    new_c[f"l{i}"] = nc
+                    w_c[f"l{i}"] = {"k": kv_new[0], "v": kv_new[1]}
+                new_stage[f"r{r}"] = new_c
+                w_stage[f"r{r}"] = w_c
+            new_stages.append(new_stage)
+            writes.append(w_stage)
+        logits = head(params, x)
+        return logits, tuple(new_stages), tuple(writes)
+
     return Model(cfg=cfg, init=init, forward=forward, extend=extend, decode=decode,
-                 init_cache=init_cache)
+                 init_cache=init_cache,
+                 decode_paged=decode_paged if paged_decode_supported(cfg) else None)

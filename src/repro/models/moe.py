@@ -226,7 +226,8 @@ def _routed_manual_ep(p, cfg, x, capacity_factor: float, rules):
         aux = _jax.lax.pmean(aux, batch_axes)  # router is replicated on model
         return y.reshape(Bl, Sl, d).astype(x_.dtype), aux
 
-    return _jax.shard_map(
+    from repro.sharding import shard_map
+    return shard_map(
         local, mesh=mesh, axis_names=set(mesh.axis_names),
         in_specs=in_specs, out_specs=(P(batch_axes), P()),
         check_vma=False)(routed, x)

@@ -2,5 +2,6 @@ from repro.sharding.rules import (  # noqa: F401
     DEFAULT_RULES,
     Rules,
     current_rules,
+    shard_map,
     use_rules,
 )

@@ -39,6 +39,22 @@ DEFAULT_RULES = {
 _local = threading.local()
 
 
+def shard_map(f, *, mesh, axis_names=None, in_specs, out_specs,
+              check_vma: bool = False):
+    """Version-compat ``shard_map``: newer JAX exposes ``jax.shard_map``
+    (``axis_names``/``check_vma``); older JAX has
+    ``jax.experimental.shard_map.shard_map`` (``check_rep``), where every
+    mesh axis is implicitly manual — callers here always pass
+    ``axis_names=set(mesh.axis_names)``, so the two agree."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=axis_names,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
 def current_rules() -> Optional["Rules"]:
     return getattr(_local, "rules", None)
 

@@ -1,0 +1,62 @@
+"""Import-safe hypothesis shim.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt). When it
+is installed, this module re-exports the real API and the property tests run
+normally. When it is missing, ``@given(...)``-decorated tests are replaced
+with a clean ``pytest.skip`` at call time — the plain unit tests in the same
+files still collect and run.
+
+Usage in test modules (instead of importing hypothesis directly)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis.strategies as st  # noqa: F401
+    from hypothesis import given, settings  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # NOT functools.wraps: the replacement must advertise a ZERO-arg
+            # signature or pytest treats the strategy parameters as fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Inert stand-in: strategy constructors are only evaluated inside
+        ``@given(...)`` argument lists, which the skipping decorator ignores."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def map(self, *_a, **_k):
+            return self
+
+        def filter(self, *_a, **_k):
+            return self
+
+    class _StrategiesModule:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _StrategiesModule()

@@ -1,7 +1,6 @@
 """Block manager invariants — unit + hypothesis property tests."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.block_manager import BlockManager, OutOfBlocks
 

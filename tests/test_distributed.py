@@ -14,7 +14,7 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 import sys
 sys.path.insert(0, "src")
@@ -22,6 +22,7 @@ from repro import configs
 from repro.models import build_model, split_params
 from repro.sharding import Rules, use_rules
 from repro.launch.specs import cache_axes_tree
+from repro.launch.mesh import make_mesh
 
 assert len(jax.devices()) == 8
 
@@ -32,8 +33,7 @@ params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=64))
 tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
 ref, _ = jax.jit(m.forward)(params, {"tokens": tokens})
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 rules = Rules(mesh, options={"sharded_moe": True})
 with mesh, use_rules(rules):
     out, _ = jax.jit(m.forward)(params, {"tokens": tokens})
@@ -52,7 +52,7 @@ lg, cache = jax.jit(m2.extend)(params2, toks[:, :S], cache,
 ref_dec, _ = jax.jit(m2.decode)(params2, toks[:, S:S+1], cache,
                                 jnp.full((B,), S, jnp.int32))
 
-mesh2 = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh2 = make_mesh((4,), ("data",))
 rules2 = Rules(mesh2, {"batch": None, "kv_seq": "data"},
                options={"cp_decode": True})
 with mesh2, use_rules(rules2):

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_attention import paged_attend, paged_decode_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 CASES = [
@@ -52,6 +52,30 @@ def test_garbage_beyond_length_ignored(rng):
     # tokens 13..15 live in page index 1 (table entry 1) — poisoned pages 2,3
     # are entirely beyond length, so outputs must match exactly
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_model_layout_adapter_matches_decode_attention(rng):
+    """ops.paged_attend (B,1,H,D in/out, engine int64 tables, total lengths)
+    == the contiguous-cache decode_attention on the same logical cache."""
+    from repro.models.attention import decode_attention
+
+    B, KV, G, D, P, NB, NP = 2, 2, 4, 32, 8, 16, 4
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    tables = np.stack([rng.choice(NB, size=NP, replace=False)
+                       for _ in range(B)]).astype(np.int64)  # engine dtype
+    lengths = jnp.asarray([13, 27], jnp.int32)  # INCLUDING the decoded token
+    out = paged_attend(q, k, v, jnp.asarray(tables), lengths, scale=0.2,
+                       impl="ref")
+    assert out.shape == (B, 1, H, D)
+    # materialize the equivalent contiguous cache: gather pages per sequence
+    k_cat = jnp.stack([k[:, tables[b]].reshape(KV, NP * P, D) for b in range(B)])
+    v_cat = jnp.stack([v[:, tables[b]].reshape(KV, NP * P, D) for b in range(B)])
+    ref = decode_attention(q, jnp.swapaxes(k_cat, 1, 2), jnp.swapaxes(v_cat, 1, 2),
+                           lengths, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
 def test_ref_impl_dispatch(rng):

@@ -1,9 +1,8 @@
 """KV quantization: KIVI axis choices, error bounds (hypothesis), kernel vs ref."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.kv_quant import QuantConfig, dequantize, quant_error, quantize, \
     quantize_kv, dequantize_kv

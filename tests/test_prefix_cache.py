@@ -1,6 +1,5 @@
 """Prefix cache: hash chaining, hit/miss accounting, eviction, host tier."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.block_manager import BlockManager
 from repro.core.prefix_cache import PrefixCache, chain_hashes

@@ -1,6 +1,5 @@
 """Scheduler: token budgets, stall-free batching, policies — unit + property."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.metrics import VTCCounter
 from repro.core.request import Request, SeqState, SeqStatus
