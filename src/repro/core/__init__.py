@@ -1,15 +1,26 @@
 """The survey's contribution areas as a working serving system (DESIGN.md §0)."""
 from repro.core.block_manager import BlockManager, OutOfBlocks  # noqa: F401
-from repro.core.engine import EngineConfig, LLMEngine  # noqa: F401
+from repro.core.engine import EngineConfig, LLMEngine, SpeculativeConfig  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     GatheredRunner,
     ModelRunner,
     PagedModelState,
     PagedRunner,
+    SpeculativeRunner,
 )
 from repro.core.kv_quant import QuantConfig, quantize_kv, dequantize_kv  # noqa: F401
-from repro.core.metrics import VTCCounter, finalize_request, qoe_score  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    SpeculativeStats,
+    VTCCounter,
+    finalize_request,
+    qoe_score,
+)
 from repro.core.prefix_cache import PrefixCache  # noqa: F401
 from repro.core.request import Request, SeqState, SeqStatus  # noqa: F401
-from repro.core.sampling import SamplingParams, sample_token  # noqa: F401
+from repro.core.sampling import (  # noqa: F401
+    SamplingParams,
+    rejection_sample,
+    sample_token,
+    sampling_probs,
+)
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan  # noqa: F401

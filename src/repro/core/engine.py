@@ -19,16 +19,26 @@ consumes), and a ``ModelRunner`` backend executes each scheduled batch:
     (B, W) gather, no full-window scatter, only the new token's K/V is
     written. ``store.host_copy_bytes`` stays flat on these steps.
 
+  * ``SpeculativeRunner`` — draft–verify decode (survey §II.B): a draft
+    model proposes k tokens, the target scores all k+1 positions in one
+    ``model.verify_paged`` forward over the same page stores, and the
+    rejection sampler in ``core.sampling`` emits an exactly
+    target-distributed prefix — greedy speculative output is token-for-token
+    identical to plain paged decoding (docs/speculative.md).
+
 ``EngineConfig.execution_backend`` selects: "auto" (paged when the model
-supports it), "gathered", or "paged" (error if unsupported). Scheduling,
-allocation and all policy above is shared by both backends — a step's
-``StepPlan`` arrives pre-split into decode vs. prefill chunks.
+supports it, speculative when ``speculative`` is also configured),
+"gathered", "paged", or "speculative" (the latter two error if
+unsupported). Scheduling, allocation and all policy above is shared by all
+backends — a step's ``StepPlan`` arrives pre-split into decode vs. prefill
+chunks, with decode chunks budgeted at k+1 tokens when speculating.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,13 +47,38 @@ import numpy as np
 from repro.core.block_manager import BlockManager, OutOfBlocks
 from repro.core.executor import make_runners, marshal_batch
 from repro.core.executor.base import ModelRunner
+from repro.core.executor.speculative import SpeculativeRunner
 from repro.core.executor.state import PagedModelState  # noqa: F401 (re-export)
 from repro.core.kv_quant import QuantConfig
-from repro.core.metrics import RequestMetrics, VTCCounter, finalize_request
+from repro.core.metrics import (RequestMetrics, SpeculativeStats, VTCCounter,
+                                finalize_request)
 from repro.core.prefix_cache import PrefixCache
 from repro.core.request import Request, SeqState, SeqStatus
-from repro.core.sampling import SamplingParams, sample_token
+from repro.core.sampling import (SamplingParams, rejection_sample,
+                                 sample_token)
 from repro.core.scheduler import ChunkWork, Scheduler, SchedulerConfig, StepPlan
+
+_rejection_jit = jax.jit(rejection_sample, static_argnames=("params",))
+
+
+@dataclasses.dataclass
+class SpeculativeConfig:
+    """Draft–verify speculative decoding (survey §II.B, docs/speculative.md).
+
+    ``draft_model``/``draft_params``: a built ``Model`` + params sharing the
+    target's vocabulary, with a paged decode path. None = self-speculation
+    (the target drafts for itself: acceptance 1.0 under greedy — the
+    correctness harness and the acceptance upper bound).
+    ``num_draft_tokens``: k tokens proposed and verified per decode step.
+    Auto-disable: once the rolling window holds >= ``window`` proposals and
+    their acceptance rate is below ``min_acceptance``, the engine permanently
+    falls back to plain paged decode — with a bad draft every speculative
+    step is strictly slower than not speculating. 0 disables the check."""
+    num_draft_tokens: int = 4
+    draft_model: Any = None
+    draft_params: Any = None
+    min_acceptance: float = 0.0
+    window: int = 64
 
 
 @dataclasses.dataclass
@@ -56,8 +91,9 @@ class EngineConfig:
     enable_prefix_cache: bool = True
     host_cache_blocks: int = 0  # AttentionStore host tier (0 = off)
     kv_quant: Optional[QuantConfig] = None  # quantize pages at rest (KIVI)
-    execution_backend: str = "auto"  # auto | gathered | paged
+    execution_backend: str = "auto"  # auto | gathered | paged | speculative
     paged_impl: str = "auto"  # paged-attention op impl: auto | pallas | interpret | ref
+    speculative: Optional[SpeculativeConfig] = None  # draft–verify decode
     seed: int = 0
 
 
@@ -87,6 +123,31 @@ class LLMEngine:
         self.store = PagedModelState(model, self.cfg)
         self.runner, self.paged_runner = make_runners(model, params, self.cfg,
                                                       self.store)
+        # speculative decoding layers on top of the paged backend; "auto"
+        # opts in when a SpeculativeConfig is present, "speculative" demands it
+        self.spec_runner: Optional[SpeculativeRunner] = None
+        self.spec_stats = SpeculativeStats()
+        self.spec_cfg = self.cfg.speculative
+        self._spec_active = False
+        self._spec_window: Deque[Tuple[int, int]] = deque()
+        if self.cfg.execution_backend == "speculative" and self.spec_cfg is None:
+            self.spec_cfg = SpeculativeConfig()  # self-speculation default
+        if self.spec_cfg is not None and self.paged_runner is not None and \
+                self.cfg.execution_backend in ("auto", "speculative"):
+            if self.spec_cfg.draft_model is not None:
+                draft_model = self.spec_cfg.draft_model
+                draft_params = self.spec_cfg.draft_params
+            else:
+                draft_model, draft_params = model, params
+            # sacrificial page for batch-padding rows (never in a real table)
+            scratch = self.bm.allocate(1)[0]
+            self.spec_runner = SpeculativeRunner(
+                self.paged_runner, draft_model, draft_params,
+                self.spec_cfg.num_draft_tokens, scratch_block=scratch)
+            self._spec_active = True
+            self.scheduler.cfg = dataclasses.replace(
+                self.scheduler.cfg,
+                speculative_tokens=self.spec_cfg.num_draft_tokens)
         self.prefix_cache = PrefixCache(self.bm,
                                         host_capacity_blocks=self.cfg.host_cache_blocks) \
             if self.cfg.enable_prefix_cache else None
@@ -179,6 +240,8 @@ class LLMEngine:
     def _do_preempt(self, seq: SeqState) -> None:
         self._free_seq_memory(seq)
         self.scheduler.preempt(seq)
+        if self.spec_runner is not None:
+            self.spec_runner.forget(seq.request_id)
 
     def _free_seq_memory(self, seq: SeqState) -> None:
         if seq.block_table:
@@ -241,16 +304,131 @@ class LLMEngine:
             self._rng, sub = jax.random.split(self._rng)
             tok = int(sample_token(sub, jnp.asarray(last[None]),
                                    seq.request.sampling)[0])
-            if seq.first_token_time is None:
-                seq.first_token_time = now
-            seq.token_times.append(now)
-            seq.generated.append(tok)
-            sp = seq.request.sampling
-            stop = (sp.stop_token is not None and tok == sp.stop_token) or \
-                   len(seq.generated) >= sp.max_new_tokens or \
-                   seq.total_len >= self.cfg.max_model_len - 1
-            if stop:
+            if self._append_token(seq, tok, now):
                 self._finish(seq, now)
+
+    def _append_token(self, seq: SeqState, tok: int, now: float) -> bool:
+        """Emit one token; returns True when the sequence must stop. The ONE
+        place stop semantics live — the speculative path emits through here
+        too, which is what keeps greedy spec==paged parity a guarantee."""
+        if seq.first_token_time is None:
+            seq.first_token_time = now
+        seq.token_times.append(now)
+        seq.generated.append(tok)
+        sp = seq.request.sampling
+        return (sp.stop_token is not None and tok == sp.stop_token) or \
+            len(seq.generated) >= sp.max_new_tokens or \
+            seq.total_len >= self.cfg.max_model_len - 1
+
+    # ------------------------------------------------------------------
+    # speculative decoding (survey §II.B; docs/speculative.md)
+    # ------------------------------------------------------------------
+    def _run_spec_group(self, chunks: List[ChunkWork], k: int) -> None:
+        """Draft k, verify k+1, rejection-sample, emit 1..k+1 tokens/seq.
+
+        ``k`` comes from the plan (``StepPlan.spec_tokens``) — the SAME value
+        the scheduler charged the token budget for, by construction."""
+        assert self.spec_runner is not None
+        if k < 1:
+            self._run_group(chunks, self.paged_runner)
+            return
+        inflight = self._step_inflight or {c.seq.request_id for c in chunks}
+        # headroom: verify writes positions [start, start + k], which must
+        # stay inside the block table / model window. Sequences at the very
+        # edge (about to hit the length stop) peel off to plain paged decode
+        # instead of shrinking k for the whole batch — k stays uniform, so
+        # there is exactly ONE propose/verify jit variant per config.
+        lim = self.cfg.max_model_len - 2 - k
+        edge = [c for c in chunks if c.start > lim]
+        chunks = [c for c in chunks if c.start <= lim]
+        if edge:
+            self._run_group(edge, self.paged_runner)
+        if not chunks:
+            return
+        ready: List[ChunkWork] = []
+        for ch in chunks:
+            if ch.seq.status is not SeqStatus.RUNNING:
+                continue
+            try:
+                self._alloc_for(ch.seq, ch.start + 1 + k, protected=inflight)
+                # the whole speculative range will be written: CoW all of it
+                self._handle_cow(ch.seq, dataclasses.replace(ch, length=1 + k))
+                ready.append(ch)
+            except OutOfBlocks:
+                self._do_preempt(ch.seq)
+        if not ready:
+            return
+        # sampling params are trace-time constants of the draft/rejection
+        # path: group chunks by the (temperature, top_k) they sample under
+        groups: Dict[tuple, List[ChunkWork]] = {}
+        for ch in ready:
+            sp = ch.seq.request.sampling
+            groups.setdefault((sp.temperature, sp.top_k), []).append(ch)
+        for (temp, topk), group in groups.items():
+            sp = SamplingParams(temperature=temp, top_k=topk)
+            batch = marshal_batch(group, self.cfg.block_size,
+                                  self.cfg.max_model_len)
+            self._rng, r_draft, r_rej = jax.random.split(self._rng, 3)
+            d_toks, d_logits, t_logits = self.spec_runner.execute_spec(
+                batch, k, sp, r_draft)
+            # logits stay on device; only the (B, k+1) tokens come host-side
+            tokens, n_acc = _rejection_jit(r_rej, d_toks, d_logits, t_logits,
+                                           params=sp)
+            tokens, n_acc = np.asarray(tokens), np.asarray(n_acc)
+            now = time.time()
+            for b, ch in enumerate(group):
+                self._emit_spec(ch, tokens[b], int(n_acc[b]), k, now)
+            self.spec_stats.steps += 1
+            self.spec_stats.proposed += k * len(group)
+            self.spec_stats.accepted += int(n_acc.sum())
+            if self.spec_cfg.min_acceptance > 0:  # else the window never drains
+                self._spec_window.append((k * len(group), int(n_acc.sum())))
+        self._maybe_disable_spec()
+
+    def _emit_spec(self, ch: ChunkWork, row: np.ndarray, n_acc: int, k: int,
+                   now: float) -> None:
+        """Append one sequence's accepted run, with per-token stop checks
+        (a stop token inside the accepted prefix truncates it)."""
+        seq = ch.seq
+        emitted = 0
+        stop = False
+        for tok in row[: n_acc + 1]:
+            self.vtc.charge(seq.request.user_id, output_tokens=1)
+            stop = self._append_token(seq, int(tok), now)
+            emitted += 1
+            if stop:
+                break
+        # positions [start, start + emitted) now hold KV of real tokens;
+        # everything past is dead (masked by length, rewritten on append)
+        seq.num_computed = ch.start + emitted
+        self.spec_stats.emitted += emitted
+        if stop:
+            self._finish(seq, now)
+            return
+        # roll back the speculative tail: free blocks past what the
+        # accepted tokens (plus the next step's input) actually need
+        keep = self.bm.blocks_needed(seq.total_len)
+        if len(seq.block_table) > keep:
+            self.bm.free(seq.block_table[keep:])
+            del seq.block_table[keep:]
+        self.spec_runner.commit(seq, ch.start, k, n_acc)
+
+    def _maybe_disable_spec(self) -> None:
+        spec = self.spec_cfg
+        if not self._spec_active or spec is None or spec.min_acceptance <= 0:
+            return
+        wp = sum(p for p, _ in self._spec_window)
+        while self._spec_window and \
+                wp - self._spec_window[0][0] >= spec.window:
+            wp -= self._spec_window.popleft()[0]
+        if wp < spec.window:
+            return
+        wa = sum(a for _, a in self._spec_window)
+        if wa / wp < spec.min_acceptance:
+            self._spec_active = False
+            self.spec_stats.disabled_at_step = self.steps
+            self.scheduler.cfg = dataclasses.replace(self.scheduler.cfg,
+                                                     speculative_tokens=0)
 
     def _handle_cow(self, seq: SeqState, ch: ChunkWork) -> None:
         """Copy-on-write for shared blocks the chunk will write into."""
@@ -270,6 +448,8 @@ class LLMEngine:
             self.prefix_cache.insert(seq.all_tokens, seq.block_table)
         self.scheduler.finish(seq)
         self._free_seq_memory(seq)
+        if self.spec_runner is not None:
+            self.spec_runner.forget(seq.request_id)
         self.finished.append(finalize_request(seq))
 
     # ------------------------------------------------------------------
@@ -288,7 +468,11 @@ class LLMEngine:
         self.steps += 1
         self._step_inflight = {c.seq.request_id for c in plan.chunks}
         try:
-            if self.paged_runner is not None and plan.decode:
+            if self._spec_active and plan.decode:
+                # speculative decode: draft k + verify k+1 per sequence
+                self._run_spec_group(plan.decode, plan.spec_tokens)
+                rest = plan.prefill
+            elif self.paged_runner is not None and plan.decode:
                 # decode-path specialization: decodes run on the paged
                 # backend, prompt chunks (if any) on the gathered reference
                 self._run_group(plan.decode, self.paged_runner)
@@ -322,6 +506,8 @@ class LLMEngine:
     def export_seq(self, request_id: str) -> dict:
         """Extract a sequence's tokens + pages + state and release it locally."""
         seq = self.seqs.pop(request_id)
+        if self.spec_runner is not None:
+            self.spec_runner.forget(request_id)
         payload = {
             "request": seq.request,
             "generated": list(seq.generated),

@@ -10,14 +10,17 @@
 from repro.core.executor.base import ExecBatch, ModelRunner, marshal_batch  # noqa: F401
 from repro.core.executor.gathered import GatheredRunner  # noqa: F401
 from repro.core.executor.paged import PagedRunner  # noqa: F401
+from repro.core.executor.speculative import SpeculativeRunner  # noqa: F401
 from repro.core.executor.state import PagedModelState  # noqa: F401
 
 
 def make_runners(model, params, engine_cfg, store):
     """Returns (gathered, paged_or_None) per the engine config's
-    ``execution_backend``: "auto" | "gathered" | "paged"."""
+    ``execution_backend``: "auto" | "gathered" | "paged" | "speculative".
+    The speculative backend layers ON TOP of the paged one (the engine
+    builds the SpeculativeRunner itself — it needs the draft model)."""
     backend = getattr(engine_cfg, "execution_backend", "auto")
-    if backend not in ("auto", "gathered", "paged"):
+    if backend not in ("auto", "gathered", "paged", "speculative"):
         raise ValueError(f"unknown execution_backend: {backend!r}")
     impl = getattr(engine_cfg, "paged_impl", "auto")
     if impl not in ("auto", "pallas", "interpret", "ref"):
@@ -29,10 +32,10 @@ def make_runners(model, params, engine_cfg, store):
                 and engine_cfg.kv_quant is None
                 and store.attn_kv_leaves()
                 and "state" not in store.kinds)
-    if backend in ("auto", "paged") and eligible:
+    if backend in ("auto", "paged", "speculative") and eligible:
         paged = PagedRunner(model, params, engine_cfg, store)
-    if backend == "paged" and paged is None:
+    if backend in ("paged", "speculative") and paged is None:
         raise ValueError(
-            "execution_backend='paged' but the model has no paged decode "
-            "path (needs a pure global-attention stack, no kv_quant)")
+            f"execution_backend={backend!r} but the model has no paged "
+            "decode path (needs a pure global-attention stack, no kv_quant)")
     return gathered, paged

@@ -139,16 +139,31 @@ class PagedRunner(ModelRunner):
         self._pages = new_pages
         # O(token) writeback keeps the host store authoritative; the device
         # mirror already holds the same write (done in-place by decode_paged)
-        bs = self.cfg.block_size
-        B = len(batch.chunks)
-        blk = batch.tables[np.arange(B), lengths // bs].astype(np.int64)
-        off = (lengths % bs).astype(np.int64)
-        writes_np = jax.device_get(writes)
-        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
-        for (si, lkey, name, idx) in self.leaves:
-            payload = np.stack([writes_np[si][f"r{r}"][lkey][name]
-                                for r in range(reps[si])])
-            self.writeback_bytes += self.store.write_token(idx, blk, off,
-                                                           payload)
+        self.writeback_bytes += self.writeback_tokens(
+            batch.tables, lengths, 1, writes, len(batch.chunks))
         self.steps += 1
         return np.asarray(logits.astype(jnp.float32))
+
+    def writeback_tokens(self, tables: np.ndarray, lengths: np.ndarray,
+                         C: int, writes, B: int) -> int:
+        """O(B*C) host-store writeback of the per-token K/V returned by
+        ``decode_paged`` (C == 1, leaves (B, KV, D)) or ``verify_paged``
+        (leaves (B, C, KV, D)) — shared by the paged and speculative
+        backends so the host-coherency contract lives in ONE place. Rows
+        past ``B`` (speculative batch padding) are dropped: their writes
+        only exist in the scratch page. Returns bytes written."""
+        bs = self.cfg.block_size
+        pos = lengths[:B, None].astype(np.int64) + np.arange(C)
+        blk = np.take_along_axis(tables[:B].astype(np.int64), pos // bs,
+                                 axis=1).reshape(-1)
+        off = (pos % bs).reshape(-1)
+        writes_np = jax.device_get(writes)
+        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
+        nbytes = 0
+        for (si, lkey, name, idx) in self.leaves:
+            payload = np.stack(
+                [np.asarray(writes_np[si][f"r{r}"][lkey][name])[:B].reshape(
+                    (B * C,) + writes_np[si][f"r{r}"][lkey][name].shape[-2:])
+                 for r in range(reps[si])])  # (R, B*C, KV, D)
+            nbytes += self.store.write_token(idx, blk, off, payload)
+        return nbytes

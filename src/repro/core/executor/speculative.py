@@ -1,0 +1,287 @@
+"""SpeculativeRunner: draft–verify decode on paged KV (survey §II.B).
+
+The decode hot path, k+1 tokens at a time: a small draft model proposes k
+tokens per sequence (autoregressively, but FUSED into one jitted call — one
+dispatch for all k proposals), then the target model scores all k+1
+positions in a single batched ``model.verify_paged`` forward over the same
+paged KV stores (query positions fold into the paged-attention op's batch
+axis). The engine's rejection sampler (``core.sampling.rejection_sample``)
+accepts a prefix and emits one corrected/bonus token, so outputs are exactly
+target-distributed — greedy speculative decoding is token-for-token
+identical to plain paged decoding, for ANY draft.
+
+State owned here:
+  * the TARGET side is borrowed from a ``PagedRunner`` — its device mirror,
+    sync machinery and host-store writeback are reused unchanged; verify
+    writes k+1 tokens per sequence instead of 1.
+  * the DRAFT side is a device-only page store (same block ids / block size
+    as the target — the engine's block tables index both), plus a
+    per-sequence ``draft_computed`` watermark. Draft KV is disposable,
+    derived state: it is rebuilt by chunked ``verify_paged`` catch-up when a
+    sequence is first seen, after preemption, or whenever the block-table
+    prefix under the watermark changed behind our back (CoW, migration) —
+    detected by snapshot comparison, never trusted blindly.
+
+Rollback invariant (docs/speculative.md): pages at positions >=
+``num_computed`` are dead by construction — every reader masks by length and
+every writer appends at ``num_computed`` — so rejected tokens need no
+physical erase; rolling back is (a) the engine freeing over-allocated tail
+blocks and (b) clamping ``draft_computed`` so rejected draft KV is rewritten.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.paged import PagedRunner
+from repro.core.sampling import SamplingParams, sample_token
+
+
+class SpeculativeRunner(ModelRunner):
+    name = "speculative"
+
+    def __init__(self, paged: PagedRunner, draft_model, draft_params,
+                 num_draft_tokens: int, scratch_block: int = 0):
+        self.paged = paged
+        self.model = paged.model
+        self.params = paged.params
+        self.cfg = paged.cfg
+        self.store = paged.store
+        self.k = num_draft_tokens
+        # batch rows are padded to pow2 (bounded jit cache over draining
+        # batches); padding rows aim every block-table entry at this reserved
+        # block so their page writes land in a sacrificial page nothing reads
+        self.scratch_block = scratch_block
+        assert self.k >= 1, "speculative decoding needs k >= 1 draft tokens"
+        assert self.model.verify_paged is not None, \
+            "target model has no paged verify path"
+        assert draft_model.decode_paged is not None, (
+            "draft model needs a paged decode path (pure global attention "
+            "stack) — pick a different draft or disable speculation")
+        assert draft_model.cfg.vocab_size == self.model.cfg.vocab_size, \
+            "draft and target must share a vocabulary"
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self._verify_jit = jax.jit(self.model.verify_paged,
+                                   static_argnames=("impl",),
+                                   donate_argnums=(2,))
+        self._draft_extend_jit = jax.jit(draft_model.verify_paged,
+                                         static_argnames=("impl",),
+                                         donate_argnums=(2,))
+        self._propose_fns: Dict[tuple, Any] = {}
+        self._draft_pages = self._init_draft_pages()
+        # per-sequence draft-KV watermark + the block-table prefix it was
+        # computed under (validated before reuse; mismatch => recompute)
+        self._draft_computed: Dict[str, int] = {}
+        self._draft_tables: Dict[str, List[int]] = {}
+        self._catchup_chunk = 32
+        self.steps = 0
+        self.writeback_bytes = 0
+        self.draft_catchup_tokens = 0
+        self.draft_resets = 0
+
+    # ------------------------------------------------------------------
+    def _init_draft_pages(self):
+        cfg = self.draft_model.cfg
+        nb, p = self.cfg.num_blocks, self.cfg.block_size
+        kv, d = cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+
+        def leaf():
+            return {"k": jnp.zeros((kv, nb, p, d), dt),
+                    "v": jnp.zeros((kv, nb, p, d), dt)}
+
+        return tuple(
+            {f"r{r}": {f"l{i}": leaf() for i in range(len(pattern))}
+             for r in range(reps)}
+            for (pattern, reps) in cfg.stages)
+
+    def _reset_draft(self) -> None:
+        """Drop ALL draft KV (e.g. pages were donated into a failed call)."""
+        self._draft_pages = self._init_draft_pages()
+        self._draft_computed.clear()
+        self._draft_tables.clear()
+        self.draft_resets += 1
+
+    def forget(self, request_id: str) -> None:
+        """Engine hook: sequence finished / preempted / migrated away."""
+        self._draft_computed.pop(request_id, None)
+        self._draft_tables.pop(request_id, None)
+
+    # ------------------------------------------------------------------
+    def _sync_draft(self, seq, nmax: int) -> None:
+        """Bring draft KV for ``seq`` up to ``seq.num_computed`` positions.
+
+        Chunked draft prefill over the paged store (pow2 chunk lengths keep
+        the jit cache bounded). Runs once per sequence in steady state —
+        afterwards the per-step propose call keeps the watermark advancing."""
+        rid = seq.request_id
+        bs = self.cfg.block_size
+        upto = seq.num_computed
+        dc = self._draft_computed.get(rid, 0)
+        snap = self._draft_tables.get(rid, [])
+        covered = -(-dc // bs)
+        if dc:
+            # block-table prefix changed under the watermark (CoW rewrote a
+            # shared block, preemption re-allocated): draft KV in and after
+            # the first diverged block is stale — clamp the watermark there
+            # (everything before it still indexes unchanged blocks)
+            table = seq.block_table
+            diverged = next((i for i in range(covered)
+                             if i >= len(snap) or i >= len(table)
+                             or snap[i] != table[i]), None)
+            if diverged is not None:
+                dc = diverged * bs
+                self.draft_resets += 1
+        toks = seq.all_tokens
+        table = np.zeros((1, nmax), np.int64)
+        tb = seq.block_table[:nmax]
+        table[0, : len(tb)] = tb
+        while dc < upto:
+            c = 1
+            while c * 2 <= min(upto - dc, self._catchup_chunk):
+                c *= 2
+            chunk = np.asarray(toks[dc: dc + c], np.int32)[None]
+            try:
+                _, self._draft_pages, _ = self._draft_extend_jit(
+                    self.draft_params, jnp.asarray(chunk), self._draft_pages,
+                    jnp.asarray(table), jnp.asarray([dc], np.int32),
+                    impl=self.cfg.paged_impl)
+            except Exception:
+                self._reset_draft()
+                raise
+            self.draft_catchup_tokens += c
+            dc += c
+        self._draft_computed[rid] = dc
+        self._draft_tables[rid] = list(seq.block_table)
+
+    # ------------------------------------------------------------------
+    def _propose_fn(self, k: int, sp: SamplingParams):
+        """One jitted call running all k+1 draft steps (k+1 dispatches would
+        dominate the spec step on small models). The extra (k+1)th iteration
+        feeds the LAST proposal purely to write its draft KV: without it the
+        all-accepted steady state would be one draft position short every
+        step and pay a B=1 catch-up dispatch per sequence. Cached per
+        (k, temperature, top_k) — sampling params are trace-time constants."""
+        key = (k, float(sp.temperature), int(sp.top_k))
+        fn = self._propose_fns.get(key)
+        if fn is not None:
+            return fn
+        dm = self.draft_model
+        impl = self.cfg.paged_impl
+
+        def propose(dparams, rng, tok0, pages, tables, lengths):
+            x = tok0  # (B, 1): the step's input token, at position lengths
+            toks, qlogits = [], []
+            for j in range(k + 1):
+                logits, pages, _ = dm.decode_paged(dparams, x, pages, tables,
+                                                   lengths + j, impl=impl)
+                if j == k:
+                    break  # KV of proposal k is written; logits unused
+                lg = logits[:, -1]
+                qlogits.append(lg)
+                if sp.temperature <= 0.0:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    rng, sub = jax.random.split(rng)
+                    nxt = sample_token(sub, lg, sp)
+                toks.append(nxt)
+                x = nxt[:, None]
+            return jnp.stack(toks, 1), jnp.stack(qlogits, 1), pages
+
+        fn = jax.jit(propose, donate_argnums=(3,))
+        self._propose_fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def supports(self, batch: ExecBatch) -> bool:
+        return self.paged.supports(batch)
+
+    def execute(self, batch: ExecBatch) -> np.ndarray:
+        """Plain decode fallback (engine uses it when k headroom hits 0)."""
+        return self.paged.execute(batch)
+
+    def execute_spec(self, batch: ExecBatch, k: int, sp: SamplingParams,
+                     rng) -> Tuple[Any, Any, Any]:
+        """Draft k tokens, verify k+1 positions on the target, one step.
+
+        Returns (draft_tokens (B, k), draft_logits (B, k, V), target_logits
+        (B, k+1, V)) as DEVICE arrays — the ENGINE runs the (jitted)
+        rejection sampler on them directly, so full-vocab logits never
+        round-trip through the host; sampling is policy, this runner only
+        executes models. The caller must follow up with ``commit`` per
+        sequence once acceptance is known."""
+        assert self.supports(batch)
+        self.paged.sync()
+        nmax = batch.tables.shape[1]
+        for ch in batch.chunks:
+            self._sync_draft(ch.seq, nmax)
+        B = len(batch.chunks)
+        # pad the batch to pow2: as sequences drain, per-B jit recompiles of
+        # the (large) propose/verify graphs would dominate wall time.
+        # Padding rows replay row 0's input but their block tables point
+        # every entry at the reserved scratch block, so their page writes —
+        # draft and target — land in a page no real table references.
+        Bp = 1
+        while Bp < B:
+            Bp *= 2
+        pad = Bp - B
+        tables = batch.tables
+        lengths = batch.cache_lens.astype(np.int32)
+        tokens = batch.tokens
+        if pad:
+            scratch = np.full((pad, nmax), self.scratch_block,
+                              batch.tables.dtype)
+            tables = np.concatenate([tables, scratch])
+            lengths = np.concatenate([lengths, np.repeat(lengths[:1], pad)])
+            tokens = np.concatenate([tokens, np.repeat(tokens[:1], pad, 0)])
+        tables_j = jnp.asarray(tables)
+        lens_j = jnp.asarray(lengths)
+        tok0 = jnp.asarray(tokens)  # (Bp, 1)
+        propose = self._propose_fn(k, sp)
+        try:
+            d_toks, d_logits, self._draft_pages = propose(
+                self.draft_params, rng, tok0, self._draft_pages, tables_j,
+                lens_j)
+        except Exception:
+            # draft pages were donated into the failed call
+            self._reset_draft()
+            raise
+        ver_tokens = jnp.concatenate([tok0, d_toks], axis=1)  # (B, k+1)
+        try:
+            t_logits, new_pages, writes = self._verify_jit(
+                self.params, ver_tokens, self.paged._pages, tables_j, lens_j,
+                impl=self.cfg.paged_impl)
+        except Exception:
+            # target mirror was donated; drop it so the next step re-uploads
+            self.paged._pages = None
+            self.paged._synced_version = -1
+            raise
+        self.paged._pages = new_pages
+        self.writeback_bytes += self.paged.writeback_tokens(
+            batch.tables, batch.cache_lens, k + 1, writes, B)
+        self.steps += 1
+        # padding rows sliced off ON DEVICE; logits stay device-resident so
+        # the engine's jitted rejection sampler consumes them without a
+        # host round-trip (only tokens/num_accepted ever come host-side)
+        return d_toks[:B], d_logits[:B], t_logits[:B]
+
+    # ------------------------------------------------------------------
+    def commit(self, seq, start: int, k: int, accepted: int) -> None:
+        """Post-acceptance draft rollback for one sequence.
+
+        Propose wrote draft KV at positions [start, start + k] for the fed
+        tokens [t_start, d_1, ..., d_k]; position start + j is valid iff
+        draft j was accepted, so the watermark clamps to the accepted prefix
+        — rejected draft KV gets rewritten by the next catch-up/propose.
+        When everything was accepted the watermark equals the sequence's new
+        ``num_computed`` and the next step proposes with ZERO catch-up. The
+        table snapshot is taken AFTER the engine's tail-block rollback so
+        the next step's validation sees the final table."""
+        rid = seq.request_id
+        self._draft_computed[rid] = start + 1 + min(accepted, k)
+        self._draft_tables[rid] = list(seq.block_table)

@@ -52,6 +52,31 @@ def finalize_request(seq: SeqState, *, expected_ttft: float = 1.0,
                       expected_tds=expected_tds))
 
 
+@dataclasses.dataclass
+class SpeculativeStats:
+    """Draft–verify acceptance accounting (survey §II.B speculative decoding).
+
+    ``proposed``/``accepted`` count draft tokens through the rejection
+    sampler; ``emitted`` counts tokens actually appended by speculative steps
+    (accepted prefix + the corrected/bonus token, minus stop-condition
+    truncation), so ``emitted / steps`` is the realized tokens-per-step the
+    speedup comes from. ``disabled_at_step`` records when the engine's
+    auto-disable tripped (windowed acceptance below the configured floor)."""
+    steps: int = 0  # speculative batches executed
+    proposed: int = 0
+    accepted: int = 0
+    emitted: int = 0
+    disabled_at_step: Optional[int] = None
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.emitted / self.steps if self.steps else 0.0
+
+
 class VTCCounter:
     """Virtual Token Counter (fairness in serving LLMs, survey §VI.C).
 

@@ -1,4 +1,12 @@
-"""Token sampling (greedy / temperature / top-k) — pure-jnp, jit-safe."""
+"""Token sampling (greedy / temperature / top-k) — pure-jnp, jit-safe.
+
+Also home of the speculative-decoding rejection sampler (Leviathan-style
+draft–verify, survey §II.B): ``rejection_sample`` accepts a prefix of draft
+tokens and resamples the first rejected position from the clipped residual
+``max(p - q, 0)``, which makes every emitted token exactly
+target-distributed — for greedy *and* temperature/top-k sampling — no matter
+how bad the draft is.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,6 +14,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -16,12 +26,88 @@ class SamplingParams:
     stop_token: Optional[int] = None
 
 
+def _filter_top_k(logits, top_k: int):
+    """Mask everything strictly below the kth-largest logit.
+
+    Ties AT the kth value are all kept (the filter is ``logits < kth``, never
+    ``<=``): masking an exact tie while keeping its equal would be an
+    arbitrary, layout-dependent choice. ``top_k >= vocab_size`` is a no-op —
+    the kth value is then the global minimum and nothing is below it (and
+    ``lax.top_k`` would reject k > V outright)."""
+    V = logits.shape[-1]
+    if top_k <= 0 or top_k >= V:
+        return logits
+    kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
 def sample_token(rng, logits, params: SamplingParams):
     """logits: (B, V) -> (B,) int32."""
     if params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / params.temperature
-    if params.top_k:
-        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
+    logits = _filter_top_k(logits.astype(jnp.float32) / params.temperature,
+                           params.top_k)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sampling_probs(logits, params: SamplingParams):
+    """The exact distribution ``sample_token`` draws from: (..., V) probs.
+
+    Greedy (temperature <= 0) is the one-hot argmax. This is what the
+    rejection sampler needs on BOTH sides of the accept ratio — draft and
+    target must be compared under the same temperature/top-k modification or
+    the output distribution is no longer the target's."""
+    V = logits.shape[-1]
+    if params.temperature <= 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), V,
+                              dtype=jnp.float32)
+    logits = _filter_top_k(logits.astype(jnp.float32) / params.temperature,
+                           params.top_k)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def rejection_sample(rng, draft_tokens, draft_logits, target_logits,
+                     params: SamplingParams):
+    """Draft–verify rejection sampling. All args batched; jit-safe.
+
+    draft_tokens: (B, k) tokens the draft proposed — MUST have been sampled
+    from ``sampling_probs(draft_logits, params)``; draft_logits: (B, k, V);
+    target_logits: (B, k+1, V) — position i is the target's distribution for
+    the token proposed at i, position k the bonus distribution after all k.
+
+    Returns (tokens (B, k+1) int32, num_accepted (B,) int32) where
+    ``tokens[b, :num_accepted[b] + 1]`` is the emitted run: the accepted
+    draft prefix plus one final token — resampled from the clipped residual
+    ``normalize(max(p - q, 0))`` at the first rejection, or sampled from the
+    bonus distribution when every draft was accepted. Each emitted token is
+    exactly target-distributed; with greedy params this degenerates to
+    "accept iff argmax matches, then emit the target argmax".
+    """
+    B, k = draft_tokens.shape
+    p = sampling_probs(target_logits, params)  # (B, k+1, V)
+    q = sampling_probs(draft_logits, params)  # (B, k, V)
+    p_d = jnp.take_along_axis(p[:, :k], draft_tokens[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
+    r_accept, r_final = jax.random.split(rng)
+    u = jax.random.uniform(r_accept, (B, k))
+    accept = u < jnp.minimum(p_d / jnp.maximum(q_d, 1e-30), 1.0)
+    # accepted prefix length: leading run of True
+    na = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1)
+    # residual distribution at every candidate rejection position; bonus at k.
+    # p == q makes the residual identically zero — unreachable (the ratio is
+    # then 1 and u < 1 always accepts) but guarded to keep the math total.
+    resid = jnp.maximum(p[:, :k] - q, 0.0)
+    rsum = resid.sum(axis=-1, keepdims=True)
+    resid = jnp.where(rsum > 0.0, resid / jnp.maximum(rsum, 1e-30), p[:, :k])
+    dists = jnp.concatenate([resid, p[:, k:]], axis=1)  # (B, k+1, V)
+    final_dist = jnp.take_along_axis(dists, na[:, None, None], axis=1)[:, 0]
+    if params.temperature <= 0.0:
+        final = jnp.argmax(final_dist, axis=-1).astype(jnp.int32)
+    else:
+        final = jax.random.categorical(
+            r_final, jnp.log(jnp.maximum(final_dist, 1e-30)),
+            axis=-1).astype(jnp.int32)
+    idx = jnp.arange(k + 1)[None, :]
+    draft_pad = jnp.pad(draft_tokens.astype(jnp.int32), ((0, 0), (0, 1)))
+    tokens = jnp.where(idx < na[:, None], draft_pad, final[:, None])
+    return tokens, na

@@ -28,6 +28,11 @@ class SchedulerConfig:
     policy: str = "fcfs"  # fcfs | vtc | qoe
     enable_chunked_prefill: bool = True
     exact_chunks: bool = False  # state-mixer models: chunks must be exact
+    # speculative decoding: each decode chunk really costs 1 + k tokens of
+    # model work (the input token + k drafted positions verified together),
+    # so the SplitFuse budget must charge it that way or a spec step blows
+    # past max_batched_tokens (k+1)x. 0 = speculation off.
+    speculative_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -48,6 +53,9 @@ class StepPlan:
     whole step."""
     decode: List[ChunkWork] = dataclasses.field(default_factory=list)
     prefill: List[ChunkWork] = dataclasses.field(default_factory=list)
+    # tokens of speculative headroom budgeted per decode chunk (0 = none);
+    # the executor may still verify fewer near the context-window edge
+    spec_tokens: int = 0
 
     @property
     def chunks(self) -> List[ChunkWork]:
@@ -122,9 +130,12 @@ class Scheduler:
         # a decoding seq's next input is its last generated token, at position
         # num_computed (== total_len - 1)
         decoding = sorted([s for s in self.running if not s.in_prefill], key=key)
+        cost = 1 + cfg.speculative_tokens
         for s in decoding[:slots]:
+            if cfg.speculative_tokens and budget < cost and decode_chunks:
+                break  # a speculating decode charges k+1 tokens of budget
             decode_chunks.append(ChunkWork(s, s.num_computed, 1))
-            budget -= 1
+            budget -= cost
             slots -= 1
 
         # 2) ongoing chunked prefills
@@ -161,4 +172,5 @@ class Scheduler:
             chunks.append(ChunkWork(s, s.num_computed, want))
             budget -= want
             slots -= 1
-        return StepPlan(decode=decode_chunks, prefill=chunks)
+        return StepPlan(decode=decode_chunks, prefill=chunks,
+                        spec_tokens=cfg.speculative_tokens)

@@ -17,7 +17,8 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core import (EngineConfig, LLMEngine, Request, SamplingParams,
+                        SpeculativeConfig)
 from repro.core.scheduler import SchedulerConfig
 from repro.models import build_model
 from repro.models.common import split_params
@@ -29,17 +30,42 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--policy", default="fcfs", choices=["fcfs", "vtc", "qoe"])
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "gathered", "paged"],
-                    help="execution backend (docs/executors.md)")
+                    choices=["auto", "gathered", "paged", "speculative"],
+                    help="execution backend (docs/executors.md, "
+                         "docs/speculative.md)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens per speculative step (setting any "
+                         "--spec-* flag also turns speculation on under "
+                         "--backend auto)")
+    ap.add_argument("--spec-draft-seed", type=int, default=None,
+                    help="draft = same arch re-initialized from this seed "
+                         "(default: self-speculation, draft == target)")
+    ap.add_argument("--spec-min-acceptance", type=float, default=0.0,
+                    help="auto-disable speculation below this windowed rate")
     ap.add_argument("--debug", action="store_true", default=True)
     args = ap.parse_args()
 
     cfg = configs.smoke_config(args.arch)
     model = build_model(cfg)
     params, _ = split_params(model.init(jax.random.PRNGKey(0), max_seq=512))
+    speculative = None
+    spec_requested = (args.backend == "speculative"
+                      or args.spec_k is not None
+                      or args.spec_draft_seed is not None
+                      or args.spec_min_acceptance > 0)
+    if spec_requested:
+        draft_model = draft_params = None
+        if args.spec_draft_seed is not None:
+            draft_model = model
+            draft_params, _ = split_params(model.init(
+                jax.random.PRNGKey(args.spec_draft_seed), max_seq=512))
+        speculative = SpeculativeConfig(
+            num_draft_tokens=args.spec_k if args.spec_k is not None else 4,
+            draft_model=draft_model, draft_params=draft_params,
+            min_acceptance=args.spec_min_acceptance)
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
-        execution_backend=args.backend,
+        execution_backend=args.backend, speculative=speculative,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -55,11 +81,18 @@ def main():
     metrics = engine.run()
     dt = time.time() - t0
     gen = sum(m.num_generated for m in metrics)
+    spec = ""
+    if engine.spec_stats.steps:
+        st = engine.spec_stats
+        spec = (f", spec acceptance={st.acceptance_rate:.2f} "
+                f"({st.tokens_per_step:.1f} tok/spec-step"
+                + (f", disabled@{st.disabled_at_step}"
+                   if st.disabled_at_step is not None else "") + ")")
     print(f"{args.arch}: {len(metrics)} requests, {gen} tokens, "
           f"{gen/dt:.1f} tok/s, {engine.steps} steps "
           f"({engine.paged_steps} paged), "
           f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
-          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms")
+          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms{spec}")
 
 
 if __name__ == "__main__":

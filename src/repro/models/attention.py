@@ -437,6 +437,52 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
+def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
+                      impl: str = "auto"):
+    """Multi-token scoring directly against block-indexed page stores.
+
+    x: (B, C, d) — C new tokens per sequence at positions
+    [lengths, lengths + C); pages: {"k","v"}: (KV, NB, P, D); block_tables:
+    (B, NP); lengths: (B,) valid tokens BEFORE this chunk. All C tokens' K/V
+    are written in place first (in-chunk causality: query j must see drafts
+    0..j-1), then the C query positions FOLD INTO THE BATCH AXIS — row
+    b*C + j attends over sequence b's block table with validity
+    ``lengths[b] + j + 1`` — so the single-token paged-attention op is reused
+    unchanged. This is the target's speculative verify and the draft's
+    paged catch-up/prefill; ``attn_decode_paged`` is exactly the C == 1
+    special case. Global attention only, same as the decode path.
+
+    Returns (out (B, C, d), new_pages, (k_new, v_new)) with k_new/v_new
+    (B, C, KV, D) — the written K/V, for the host-store writeback.
+    """
+    from repro.kernels.paged_attention import paged_attend
+
+    B, C, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)
+    use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    P = pages["k"].shape[2]
+    blk = block_tables[jnp.arange(B)[:, None], pos // P].reshape(B * C)
+    off = (pos % P).reshape(B * C)
+    k_new = k.astype(pages["k"].dtype)  # (B, C, KV, D)
+    v_new = v.astype(pages["v"].dtype)
+    k_pages = pages["k"].at[:, blk, off].set(
+        jnp.moveaxis(k_new.reshape((B * C,) + k_new.shape[2:]), 1, 0))
+    v_pages = pages["v"].at[:, blk, off].set(
+        jnp.moveaxis(v_new.reshape((B * C,) + v_new.shape[2:]), 1, 0))
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    H = q.shape[2]
+    qf = q.reshape(B * C, 1, H, -1)  # b-major: row b*C + j is (seq b, query j)
+    tables_f = jnp.repeat(block_tables, C, axis=0)
+    out = paged_attend(qf, k_pages, v_pages, tables_f, (pos + 1).reshape(B * C),
+                       scale=scale, impl=impl)
+    out = proj_out(p["wo"], out.reshape(B, C, H, -1))
+    return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
+
+
 def init_attn_cache(cfg, batch, max_seq, dtype):
     kv = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}

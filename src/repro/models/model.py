@@ -268,6 +268,17 @@ def _layer_decode_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
     return x, new_pages, kv_new
 
 
+def _layer_verify_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
+                        impl: str = "auto"):
+    """C-token scoring with attention running directly on page stores."""
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    y, new_pages, kv_new = attn.attn_verify_paged(
+        p["mixer"], cfg, spec, h, pages, block_tables, lengths, impl=impl)
+    x = x + y
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    return x, new_pages, kv_new
+
+
 def paged_decode_supported(cfg: ModelConfig) -> bool:
     """Whether ``decode_paged`` covers this stack: every mixer must be plain
     global attention. MLA (latent pages), window/chunked attention (dense
@@ -309,6 +320,7 @@ class Model(NamedTuple):
     decode: Callable
     init_cache: Callable
     decode_paged: Optional[Callable] = None  # only when paged_decode_supported
+    verify_paged: Optional[Callable] = None  # C-token scoring on paged KV
 
 
 def _stack_layers_axis(tree):
@@ -688,6 +700,51 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = head(params, x)
         return logits, tuple(new_stages), tuple(writes)
 
+    # ---------------- verify_paged (C tokens, no gathered window) -------------
+    def verify_paged(params, tokens, pages, block_tables, lengths, *,
+                     impl: str = "auto"):
+        """Score C tokens per sequence straight off the page stores.
+
+        tokens: (B, C) at positions [lengths, lengths + C); pages / tables /
+        lengths as in ``decode_paged``. The speculative verify step (target
+        scores the k drafts + 1 bonus position in one forward) and the
+        draft's paged catch-up both run through here; ``decode_paged`` is
+        the C == 1 case. Layer loop unrolled for the same donation reason.
+        Returns (logits (B, C, V), new_pages, kv_writes) with write leaves
+        (B, C, KV, D) for the host-store writeback."""
+        B, C = tokens.shape
+        x = embed_tokens(params, tokens)
+        if cfg.learned_positions:
+            size = params["pos_embed"].shape[0]
+            pos = jnp.clip(lengths[:, None] + jnp.arange(C), 0, size - 1)
+            x = x + jnp.take(params["pos_embed"], pos, axis=0).astype(dtype)
+        x = lconstraint(x, ("batch", None, "embed"))
+        new_stages = []
+        writes = []
+        for si, (pattern, reps) in enumerate(cfg.stages):
+            stage_p = params["stages"][si]
+            new_stage = {}
+            w_stage = {}
+            for r in range(reps):
+                p_r = jax.tree.map(lambda a: a[r], stage_p)
+                new_c = {}
+                w_c = {}
+                for i, spec in enumerate(pattern):
+                    x, nc, kv_new = _layer_verify_paged(
+                        p_r[f"l{i}"], spec, cfg, x,
+                        pages[si][f"r{r}"][f"l{i}"], block_tables, lengths,
+                        impl=impl)
+                    new_c[f"l{i}"] = nc
+                    w_c[f"l{i}"] = {"k": kv_new[0], "v": kv_new[1]}
+                new_stage[f"r{r}"] = new_c
+                w_stage[f"r{r}"] = w_c
+            new_stages.append(new_stage)
+            writes.append(w_stage)
+        logits = head(params, x)
+        return logits, tuple(new_stages), tuple(writes)
+
+    paged_ok = paged_decode_supported(cfg)
     return Model(cfg=cfg, init=init, forward=forward, extend=extend, decode=decode,
                  init_cache=init_cache,
-                 decode_paged=decode_paged if paged_decode_supported(cfg) else None)
+                 decode_paged=decode_paged if paged_ok else None,
+                 verify_paged=verify_paged if paged_ok else None)

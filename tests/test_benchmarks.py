@@ -1,0 +1,71 @@
+"""Benchmark smoke tests: every ``benchmarks/bench_*.py`` entrypoint runs.
+
+Benchmarks rot silently — they are entrypoints nothing imports, so a rename
+in the engine or executor API only surfaces when someone happens to run
+them. Each test here executes a bench module's ``main()`` once with its
+workload clamped down (requests capped, timing iterations collapsed to one)
+so the whole sweep stays minutes-not-hours while still exercising the real
+code paths end to end. ``slow``-marked: deselect with ``-m 'not slow'``.
+"""
+import importlib
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import benchmarks.common as bcommon  # noqa: E402 (namespace pkg at repo root)
+
+BENCH_MODULES = [
+    "bench_batching",
+    "bench_chunked_prefill",
+    "bench_disagg",
+    "bench_kernels",
+    "bench_kv_quant",
+    "bench_moe",
+    "bench_paging",
+    "bench_prefix_cache",
+    "bench_speculative",
+]
+
+
+def _tiny_make_requests(cfg, n, rng, **kw):
+    """Clamp the workload: few requests, short prompts/generations."""
+    kw["prompt_lo"] = min(kw.get("prompt_lo", 10), 8)
+    kw["prompt_hi"] = min(kw.get("prompt_hi", 60), 16)
+    kw["gen_lo"] = min(kw.get("gen_lo", 4), 3)
+    kw["gen_hi"] = min(kw.get("gen_hi", 24), 5)
+    return bcommon.make_requests(cfg, min(n, 2), rng, **kw)
+
+
+def _tiny_timed(fn, *args, warmup=0, iters=1, **kw):
+    return bcommon.timed(fn, *args, warmup=0, iters=1, **kw)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", BENCH_MODULES)
+def test_bench_entrypoint_runs(name, monkeypatch):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    # benches bind these names at import time: patch the module's own copy
+    if hasattr(mod, "make_requests"):
+        monkeypatch.setattr(mod, "make_requests", _tiny_make_requests)
+    if hasattr(mod, "timed"):
+        monkeypatch.setattr(mod, "timed", _tiny_timed)
+    mod.main()
+
+
+@pytest.mark.slow
+def test_bench_runner_registry_complete():
+    """benchmarks/run.py must know every bench module in the tree."""
+    import pathlib
+
+    from benchmarks import run as bench_run
+
+    tree = {p.stem for p in
+            (pathlib.Path(__file__).parent.parent / "benchmarks").glob(
+                "bench_*.py")}
+    registered = set()
+    for _, fn in bench_run.ALL:
+        registered.add(fn.__module__.rsplit(".", 1)[-1])
+    assert tree == registered, tree ^ registered

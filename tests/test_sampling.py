@@ -1,0 +1,87 @@
+"""Sampling: greedy/temperature/top-k edge cases + the sampling_probs mirror.
+
+Regressions pinned here:
+  * ``top_k >= vocab_size`` must be a no-op (``lax.top_k`` rejects k > V
+    outright, and k == V filters nothing by definition);
+  * ties AT the kth value are all kept — masking one of two equal logits
+    while keeping the other would be an arbitrary, layout-dependent choice;
+  * ``sampling_probs`` is the exact distribution ``sample_token`` draws
+    from (the rejection sampler relies on this equivalence).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.sampling import SamplingParams, sample_token, sampling_probs
+
+
+def test_top_k_at_least_vocab_is_noop():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 8)),
+                         jnp.float32)
+    key = jax.random.PRNGKey(7)
+    base = sample_token(key, logits, SamplingParams(temperature=1.0, top_k=0))
+    for k in (8, 9, 100):
+        got = sample_token(key, logits,
+                           SamplingParams(temperature=1.0, top_k=k))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+        np.testing.assert_allclose(
+            np.asarray(sampling_probs(logits,
+                                      SamplingParams(temperature=1.0, top_k=k))),
+            np.asarray(sampling_probs(logits,
+                                      SamplingParams(temperature=1.0, top_k=0))))
+
+
+def test_top_k_tie_at_kth_value_keeps_all_tied():
+    # three-way tie at the top with top_k=2: the kth value is 1.0, and ALL
+    # logits equal to it must stay samplable — none masked while a twin stays
+    logits = jnp.asarray([[1.0, 1.0, 1.0, 0.0, -2.0]], jnp.float32)
+    probs = np.asarray(sampling_probs(
+        logits, SamplingParams(temperature=1.0, top_k=2)))[0]
+    assert (probs[:3] > 0).all(), probs
+    np.testing.assert_allclose(probs[0], probs[1])
+    np.testing.assert_allclose(probs[1], probs[2])
+    assert probs[3] == 0 and probs[4] == 0, probs
+
+
+def test_top_k_filters_below_kth():
+    logits = jnp.asarray([[5.0, 4.0, 3.0, 2.0, 1.0]], jnp.float32)
+    probs = np.asarray(sampling_probs(
+        logits, SamplingParams(temperature=1.0, top_k=2)))[0]
+    assert (probs[:2] > 0).all() and (probs[2:] == 0).all(), probs
+
+
+def test_greedy_probs_one_hot():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [2.0, 0.0, 1.0]], jnp.float32)
+    probs = np.asarray(sampling_probs(logits, SamplingParams(temperature=0.0)))
+    np.testing.assert_array_equal(probs, [[0, 1, 0], [1, 0, 0]])
+    toks = sample_token(jax.random.PRNGKey(0), logits,
+                        SamplingParams(temperature=0.0))
+    np.testing.assert_array_equal(np.asarray(toks), [1, 0])
+
+
+def test_sample_token_matches_sampling_probs_empirically():
+    """sample_token's empirical frequencies converge to sampling_probs."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(1, 6)), jnp.float32)
+    sp = SamplingParams(temperature=0.7, top_k=4)
+    probs = np.asarray(sampling_probs(logits, sp))[0]
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    toks = np.asarray(jax.vmap(lambda k: sample_token(k, logits, sp)[0])(keys))
+    emp = np.bincount(toks, minlength=6) / len(toks)
+    assert np.abs(emp - probs).sum() < 0.06, (emp, probs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 10))
+def test_property_top_k_probs_sum_to_one_and_support_bounded(seed, top_k):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 7)) * 3, jnp.float32)
+    probs = np.asarray(sampling_probs(
+        logits, SamplingParams(temperature=0.9, top_k=top_k)))
+    np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-5)
+    if top_k < 7:
+        # support may exceed top_k ONLY via exact ties at the kth value
+        kth = np.sort(np.asarray(logits), axis=-1)[:, -top_k]
+        expect = (np.asarray(logits) >= kth[:, None]).sum(-1)
+        assert ((probs > 0).sum(-1) == expect).all()

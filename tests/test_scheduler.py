@@ -123,3 +123,45 @@ def test_property_budget_never_exceeded(prompt_lens, budget, slots):
                 c.seq.generated.append(0)
                 if len(c.seq.generated) >= 2:
                     sch.finish(c.seq)
+
+
+def test_speculative_budget_charges_k_plus_one():
+    """A speculating decode chunk costs 1 + k tokens of SplitFuse budget
+    (the input token plus k drafted positions verified together)."""
+    sch = Scheduler(SchedulerConfig(max_batch_slots=8, max_batched_tokens=10,
+                                    prefill_chunk=16, speculative_tokens=4))
+    for i in range(5):
+        s = mkseq(f"d{i}", 4, arrival=i)
+        s.status = SeqStatus.RUNNING
+        s.num_computed = 4
+        s.generated = [1]
+        sch.running.append(s)
+    plan = sch.plan()
+    assert plan.spec_tokens == 4
+    # budget 10 fits two decodes at cost 5 each, not five at cost 1
+    assert len(plan.decode) == 2
+    # and always at least one decode even when the budget is too small
+    sch2 = Scheduler(SchedulerConfig(max_batch_slots=8, max_batched_tokens=2,
+                                     prefill_chunk=16, speculative_tokens=4))
+    s = mkseq("d", 4)
+    s.status = SeqStatus.RUNNING
+    s.num_computed = 4
+    s.generated = [1]
+    sch2.running.append(s)
+    assert len(sch2.plan().decode) == 1
+
+
+def test_speculative_budget_off_by_default():
+    """speculative_tokens=0 must leave the decode path untouched: every
+    running decode advances regardless of the token budget."""
+    sch = Scheduler(SchedulerConfig(max_batch_slots=8, max_batched_tokens=4,
+                                    prefill_chunk=16))
+    for i in range(6):
+        s = mkseq(f"d{i}", 4, arrival=i)
+        s.status = SeqStatus.RUNNING
+        s.num_computed = 4
+        s.generated = [1]
+        sch.running.append(s)
+    plan = sch.plan()
+    assert len(plan.decode) == 6  # baseline semantics preserved
+    assert plan.spec_tokens == 0

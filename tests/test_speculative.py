@@ -1,0 +1,364 @@
+"""Speculative decoding: rejection-sampler exactness, verify-path numerics,
+engine-level parity and rollback (docs/speculative.md).
+
+The load-bearing invariants:
+  * the rejection sampler emits exactly target-distributed tokens for ANY
+    draft (greedy: accept iff argmax matches, then emit the target argmax);
+  * ``model.verify_paged`` over C positions == C sequential ``decode_paged``
+    steps, bit-for-bit on the page stores;
+  * greedy speculative engine output is token-for-token identical to the
+    plain paged backend — including under prefix-cache CoW, preemption
+    churn, hostile drafts, and after auto-disable trips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import configs
+from repro.core import (EngineConfig, LLMEngine, Request, SamplingParams,
+                        SpeculativeConfig, rejection_sample, sampling_probs)
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = configs.smoke_config("olmo-1b")
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+    return cfg, m, params
+
+
+def _cfg(backend="speculative", **kw):
+    base = dict(block_size=8, num_blocks=128, num_state_slots=16,
+                max_model_len=128, execution_backend=backend,
+                scheduler=SchedulerConfig(max_batch_slots=4,
+                                          max_batched_tokens=48,
+                                          prefill_chunk=16))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _drive(m, params, ecfg, prompts, max_new=8, temperature=0.0, top_k=0):
+    eng = LLMEngine(m, params, ecfg)
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(
+            request_id=f"r{i}", prompt=p,
+            sampling=SamplingParams(max_new_tokens=max_new,
+                                    temperature=temperature, top_k=top_k)))
+    eng.run()
+    return eng
+
+
+def _prompts(cfg, seed=7, n=4, lo=10, hi=40):
+    r = np.random.default_rng(seed)
+    return [list(map(int, r.integers(2, cfg.vocab_size,
+                                     size=int(r.integers(lo, hi)))))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# rejection sampler
+# ---------------------------------------------------------------------------
+
+def test_rejection_greedy_accepts_iff_argmax_matches():
+    V, k = 16, 3
+    rng = np.random.default_rng(0)
+    tl = np.asarray(rng.normal(size=(1, k + 1, V)), np.float32)
+    tgt = tl.argmax(-1)[0]  # target argmax at each position
+    sp = SamplingParams(temperature=0.0)
+    # draft logits irrelevant under greedy (q is one-hot at the draft token
+    # by construction when the draft greedy-decodes); agree on first 2 only
+    dl = np.zeros((1, k, V), np.float32)
+    draft = np.asarray([[tgt[0], tgt[1], (tgt[2] + 1) % V]], np.int32)
+    for b in range(k):
+        dl[0, b, draft[0, b]] = 10.0
+    toks, na = rejection_sample(jax.random.PRNGKey(0), jnp.asarray(draft),
+                                jnp.asarray(dl), jnp.asarray(tl), sp)
+    toks, na = np.asarray(toks), int(np.asarray(na)[0])
+    assert na == 2
+    assert list(toks[0, :3]) == [tgt[0], tgt[1], tgt[2]]  # correction = argmax
+
+    # full agreement: k accepted + bonus from position k
+    draft_all = np.asarray([tgt[:k]], np.int32)
+    dl_all = np.zeros((1, k, V), np.float32)
+    for b in range(k):
+        dl_all[0, b, tgt[b]] = 10.0
+    toks, na = rejection_sample(jax.random.PRNGKey(1), jnp.asarray(draft_all),
+                                jnp.asarray(dl_all), jnp.asarray(tl), sp)
+    assert int(np.asarray(na)[0]) == k
+    assert list(np.asarray(toks)[0]) == list(tgt)
+
+
+def test_rejection_accepts_everything_when_draft_equals_target():
+    """q == p => min(1, p/q) == 1 at every drafted token: acceptance 1.0."""
+    V, k, B = 32, 4, 3
+    rng = np.random.default_rng(3)
+    tl = np.asarray(rng.normal(size=(B, k + 1, V)) * 2, np.float32)
+    sp = SamplingParams(temperature=0.8, top_k=8)
+    q = sampling_probs(jnp.asarray(tl[:, :k]), sp)
+    for seed in range(20):
+        key = jax.random.PRNGKey(seed)
+        kd, kr = jax.random.split(key)
+        draft = jax.random.categorical(kd, jnp.log(jnp.maximum(q, 1e-30)))
+        _, na = rejection_sample(kr, draft.astype(jnp.int32),
+                                 jnp.asarray(tl[:, :k]), jnp.asarray(tl), sp)
+        assert (np.asarray(na) == k).all()
+
+
+def _first_token_dist(tl, dl, sp, n=4000):
+    """Empirical distribution of the FIRST emitted token over n runs: the
+    draft proposes from q each run, the sampler accepts/resamples."""
+    k = dl.shape[1]
+    q = sampling_probs(jnp.asarray(dl), sp)
+    logq = jnp.log(jnp.maximum(q, 1e-30))
+
+    def one(key):
+        kd, kr = jax.random.split(key)
+        draft = jax.random.categorical(kd, logq).astype(jnp.int32)
+        toks, _ = rejection_sample(kr, draft, jnp.asarray(dl),
+                                   jnp.asarray(tl), sp)
+        return toks[0, 0]
+
+    toks = np.asarray(jax.vmap(one)(jax.random.split(jax.random.PRNGKey(0), n)))
+    return np.bincount(toks, minlength=tl.shape[-1]) / n
+
+
+def test_rejection_first_token_is_target_distributed():
+    """The headline guarantee: the emitted token's marginal equals the
+    target distribution even when the draft is completely different."""
+    V, k = 8, 3
+    rng = np.random.default_rng(11)
+    tl = np.asarray(rng.normal(size=(1, k + 1, V)) * 2, np.float32)
+    dl = np.asarray(rng.normal(size=(1, k, V)) * 2, np.float32)
+    sp = SamplingParams(temperature=1.0)
+    emp = _first_token_dist(tl, dl, sp)
+    want = np.asarray(sampling_probs(jnp.asarray(tl), sp))[0, 0]
+    assert np.abs(emp - want).sum() < 0.08, (emp, want)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+       st.sampled_from([0.7, 1.0]), st.sampled_from([0, 4]))
+def test_property_rejection_matches_target_distribution(seed, k, temp, top_k):
+    rng = np.random.default_rng(seed)
+    V = 8
+    tl = np.asarray(rng.normal(size=(1, k + 1, V)) * 2, np.float32)
+    dl = np.asarray(rng.normal(size=(1, k, V)) * 2, np.float32)
+    sp = SamplingParams(temperature=temp, top_k=top_k)
+    emp = _first_token_dist(tl, dl, sp)
+    want = np.asarray(sampling_probs(jnp.asarray(tl), sp))[0, 0]
+    assert np.abs(emp - want).sum() < 0.1, (emp, want)
+
+
+# ---------------------------------------------------------------------------
+# verify_paged numerics
+# ---------------------------------------------------------------------------
+
+def test_verify_paged_matches_sequential_decode(olmo):
+    """One C-token verify == C one-token decode_paged steps: identical
+    logits AND identical page stores (decode_paged is the C == 1 case)."""
+    cfg, m, params = olmo
+    NB, P, B, C = 16, 8, 2, 4
+    kv, d = cfg.num_kv_heads, cfg.head_dim
+
+    def pages0():
+        return tuple(
+            {f"r{r}": {f"l{i}": {
+                "k": jnp.zeros((kv, NB, P, d), jnp.dtype(cfg.dtype)),
+                "v": jnp.zeros((kv, NB, P, d), jnp.dtype(cfg.dtype))}
+                for i in range(len(pat))} for r in range(reps)}
+            for (pat, reps) in cfg.stages)
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, size=(B, 11)).astype(np.int32)
+    tables = np.stack([np.arange(8), np.arange(8, 16)]).astype(np.int32)
+    _, pages, _ = m.verify_paged(params, jnp.asarray(prompt), pages0(),
+                                 jnp.asarray(tables),
+                                 jnp.zeros((B,), jnp.int32))
+    toks = rng.integers(2, cfg.vocab_size, size=(B, C)).astype(np.int32)
+    pa = jax.tree.map(lambda x: x, pages)
+    seq_logits = []
+    for j in range(C):
+        lg, pa, _ = m.decode_paged(params, jnp.asarray(toks[:, j: j + 1]), pa,
+                                   jnp.asarray(tables),
+                                   jnp.full((B,), 11 + j, jnp.int32))
+        seq_logits.append(np.asarray(lg[:, 0], np.float32))
+    vg, pb, writes = m.verify_paged(params, jnp.asarray(toks), pages,
+                                    jnp.asarray(tables),
+                                    jnp.full((B,), 11, jnp.int32))
+    np.testing.assert_allclose(np.asarray(vg, np.float32),
+                               np.stack(seq_logits, 1), atol=2e-2, rtol=2e-2)
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+    # writes carry the (B, C, KV, D) per-token K/V for host writeback
+    w = writes[0]["r0"]["l0"]["k"]
+    assert w.shape == (B, C, kv, d)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity and behavior
+# ---------------------------------------------------------------------------
+
+def test_spec_greedy_matches_paged(olmo):
+    cfg, m, params = olmo
+    prompts = _prompts(cfg)
+    ref = _drive(m, params, _cfg(backend="paged"), prompts)
+    spec = _drive(m, params, _cfg(), prompts)
+    assert spec.spec_stats.steps > 0
+    assert spec.spec_stats.acceptance_rate == 1.0  # self-speculation, greedy
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == spec.seqs[f"r{i}"].generated, i
+
+
+def test_spec_greedy_exact_under_hostile_draft(olmo):
+    """The rejection guarantee end to end: a random re-initialized draft
+    accepts ~nothing yet greedy output is still token-for-token exact."""
+    cfg, m, params = olmo
+    bad_params, _ = split_params(m.init(jax.random.PRNGKey(99), max_seq=256))
+    prompts = _prompts(cfg, seed=13)
+    ref = _drive(m, params, _cfg(backend="paged"), prompts)
+    spec = _drive(m, params, _cfg(speculative=SpeculativeConfig(
+        num_draft_tokens=3, draft_model=m, draft_params=bad_params)), prompts)
+    assert spec.spec_stats.acceptance_rate < 0.5
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == spec.seqs[f"r{i}"].generated, i
+
+
+def test_spec_auto_disable_and_budget_restore(olmo):
+    cfg, m, params = olmo
+    bad_params, _ = split_params(m.init(jax.random.PRNGKey(5), max_seq=256))
+    prompts = _prompts(cfg, seed=17)
+    spec_cfg = SpeculativeConfig(num_draft_tokens=3, draft_model=m,
+                                 draft_params=bad_params, min_acceptance=0.9,
+                                 window=12)
+    eng = _drive(m, params, _cfg(speculative=spec_cfg), prompts, max_new=10)
+    assert eng.spec_stats.disabled_at_step is not None
+    assert not eng._spec_active
+    assert eng.scheduler.cfg.speculative_tokens == 0  # budget restored
+    ref = _drive(m, params, _cfg(backend="paged"), prompts, max_new=10)
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == eng.seqs[f"r{i}"].generated, i
+
+
+def test_spec_with_prefix_cache_cow_and_preemption(olmo):
+    """Shared-prefix requests (CoW on published blocks) and tight memory
+    (preemption churn) must not corrupt speculative decode."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(3)
+    prefix = list(map(int, r.integers(2, cfg.vocab_size, size=24)))
+    prompts = [prefix + list(map(int, r.integers(2, cfg.vocab_size, size=n)))
+               for n in (5, 9, 7, 11)]
+
+    def shared_run(backend, **kw):
+        eng = LLMEngine(m, params, _cfg(backend=backend, **kw))
+        eng.add_request(Request(request_id="r0", prompt=prompts[0],
+                                sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.add_request(Request(request_id=f"r{i}", prompt=p,
+                                    sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        return eng
+
+    g = shared_run("gathered")
+    s = shared_run("speculative")
+    assert s.seqs["r1"].prefix_hit_tokens >= 16
+    for i in range(len(prompts)):
+        assert g.seqs[f"r{i}"].generated == s.seqs[f"r{i}"].generated, i
+
+    # tight memory: preemptions force draft-KV rebuilds via the snapshot check
+    g2 = _drive(m, params, _cfg(backend="gathered", num_blocks=16,
+                                enable_prefix_cache=False), prompts, max_new=6)
+    s2 = _drive(m, params, _cfg(num_blocks=16, enable_prefix_cache=False),
+                prompts, max_new=6)
+    for i in range(len(prompts)):
+        assert g2.seqs[f"r{i}"].generated == s2.seqs[f"r{i}"].generated, i
+
+
+def test_spec_temperature_reproducible_and_stop_tokens(olmo):
+    cfg, m, params = olmo
+    prompts = _prompts(cfg, seed=23, n=3, lo=10, hi=20)
+    a = _drive(m, params, _cfg(seed=0), prompts, temperature=0.8, top_k=16)
+    b = _drive(m, params, _cfg(seed=0), prompts, temperature=0.8, top_k=16)
+    c = _drive(m, params, _cfg(seed=1), prompts, temperature=0.8, top_k=16)
+    ga = {i: a.seqs[f"r{i}"].generated for i in range(3)}
+    assert ga == {i: b.seqs[f"r{i}"].generated for i in range(3)}
+    assert ga != {i: c.seqs[f"r{i}"].generated for i in range(3)}
+    # a stop token inside an accepted run truncates it mid-step
+    ref = _drive(m, params, _cfg(backend="paged"), prompts, max_new=16)
+    stream = ref.seqs["r0"].generated
+    stop = stream[2]
+    want = stream[: stream.index(stop) + 1]  # truncate at FIRST occurrence
+    for backend in ("paged", "speculative"):
+        eng = LLMEngine(m, params, _cfg(backend=backend))
+        eng.add_request(Request(request_id="r0", prompt=prompts[0],
+                                sampling=SamplingParams(max_new_tokens=16,
+                                                        stop_token=stop)))
+        eng.run()
+        assert eng.seqs["r0"].generated == want, backend
+
+
+def test_spec_rolls_back_tail_blocks(olmo):
+    """Rejected-tail blocks are freed: block usage after a spec step covers
+    exactly the accepted tokens, not start + k + 1."""
+    cfg, m, params = olmo
+    bad_params, _ = split_params(m.init(jax.random.PRNGKey(42), max_seq=256))
+    prompts = _prompts(cfg, seed=29, n=2, lo=10, hi=14)
+    eng = _drive(m, params, _cfg(speculative=SpeculativeConfig(
+        num_draft_tokens=4, draft_model=m, draft_params=bad_params)),
+        prompts, max_new=6)
+    for seq in eng.seqs.values():
+        assert not seq.block_table  # finished: everything freed
+    # one block reserved for padding scratch, nothing else leaked
+    assert eng.bm.used_blocks == 1 + (eng.prefix_cache.cached_device_blocks()
+                                      if eng.prefix_cache else 0)
+
+
+def test_spec_peels_off_window_edge_sequences(olmo):
+    """A sequence whose verify range would cross max_model_len runs plain
+    paged decode (peeled off the spec batch) — without shrinking k for the
+    rest — and still matches the paged backend token-for-token."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(37)
+    prompts = [list(map(int, r.integers(2, cfg.vocab_size, size=n)))
+               for n in (118, 12)]  # one near the 128-token window edge
+    ref = _drive(m, params, _cfg(backend="paged"), prompts, max_new=16)
+    spec = _drive(m, params, _cfg(), prompts, max_new=16)
+    assert spec.spec_stats.steps > 0
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == spec.seqs[f"r{i}"].generated, i
+
+
+def test_spec_window_bounded_without_min_acceptance(olmo):
+    """min_acceptance=0 (the default) must not accumulate window entries —
+    a long-lived server would otherwise leak one tuple per spec step."""
+    cfg, m, params = olmo
+    eng = _drive(m, params, _cfg(), _prompts(cfg, seed=41, n=2, lo=10, hi=14),
+                 max_new=8)
+    assert eng.spec_stats.steps > 0
+    assert len(eng._spec_window) == 0
+
+
+def test_spec_requires_paged_path():
+    cfg = configs.smoke_config("starcoder2-3b")  # windowed attention
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+    with pytest.raises(ValueError):
+        LLMEngine(m, params, _cfg(backend="speculative"))
+
+
+def test_spec_interpret_kernel_path(olmo):
+    """Speculative decode through the Pallas interpreter — the TPU code
+    path of draft, verify and paged attention validated on CPU."""
+    cfg, m, params = olmo
+    prompts = _prompts(cfg, seed=31, n=2, lo=10, hi=14)
+    ref = _drive(m, params, _cfg(backend="paged"), prompts, max_new=3)
+    itp = _drive(m, params, _cfg(paged_impl="interpret"), prompts, max_new=3)
+    assert itp.spec_stats.steps > 0
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == itp.seqs[f"r{i}"].generated, i
