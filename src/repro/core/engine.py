@@ -11,13 +11,16 @@ consumes), and a ``ModelRunner`` backend executes each scheduled batch:
   * ``GatheredRunner`` — stages a dense (B, W) cache window, runs the jitted
     ``model.extend`` (decodes are chunks of length 1 — SplitFuse unified
     batching), scatters written positions back. Prefill always runs here, as
-    do state-mixer models (Mamba/xLSTM/whisper cross-KV), MLA, windowed /
-    chunked attention, and KV-quantized stores.
+    do state-mixer models (Mamba/xLSTM/whisper cross-KV), MLA, and windowed /
+    chunked attention.
   * ``PagedRunner`` — decode chunks of pure global-attention models run
     ``model.decode_paged`` directly against the page stores through block
     tables (the Pallas ``paged_attention`` op; interpret/ref on CPU): no
     (B, W) gather, no full-window scatter, only the new token's K/V is
-    written. ``store.host_copy_bytes`` stays flat on these steps.
+    written. ``store.host_copy_bytes`` stays flat on these steps. With
+    ``kv_quant`` the page stores hold KIVI uint8 codes + scale/zero planes
+    and the quantized paged-attention kernel dequantizes in-VMEM — the same
+    HBM holds ~2x the resident sequences at 8-bit (docs/kv_quant.md).
 
   * ``SpeculativeRunner`` — draft–verify decode (survey §II.B): a draft
     model proposes k tokens, the target scores all k+1 positions in one
@@ -54,8 +57,8 @@ from repro.core.metrics import (RequestMetrics, SpeculativeStats, VTCCounter,
                                 finalize_request)
 from repro.core.prefix_cache import PrefixCache
 from repro.core.request import Request, SeqState, SeqStatus
-from repro.core.sampling import (SamplingParams, rejection_sample,
-                                 sample_token)
+from repro.core.sampling import (SamplingParams, greedy_token_host,
+                                 rejection_sample, sample_token)
 from repro.core.scheduler import ChunkWork, Scheduler, SchedulerConfig, StepPlan
 
 _rejection_jit = jax.jit(rejection_sample, static_argnames=("params",))
@@ -90,7 +93,7 @@ class EngineConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     enable_prefix_cache: bool = True
     host_cache_blocks: int = 0  # AttentionStore host tier (0 = off)
-    kv_quant: Optional[QuantConfig] = None  # quantize pages at rest (KIVI)
+    kv_quant: Optional[QuantConfig] = None  # KIVI pages at rest (docs/kv_quant.md)
     execution_backend: str = "auto"  # auto | gathered | paged | speculative
     paged_impl: str = "auto"  # paged-attention op impl: auto | pallas | interpret | ref
     speculative: Optional[SpeculativeConfig] = None  # draft–verify decode
@@ -301,9 +304,14 @@ class LLMEngine:
             self.vtc.charge(seq.request.user_id, input_tokens=prompt_overlap,
                             output_tokens=1)
             last = logits_np[b, ch.length - 1]
-            self._rng, sub = jax.random.split(self._rng)
-            tok = int(sample_token(sub, jnp.asarray(last[None]),
-                                   seq.request.sampling)[0])
+            if seq.request.sampling.temperature <= 0.0:
+                # greedy fast path (no per-token device dispatch, no rng
+                # consumption); semantics owned by core/sampling.py
+                tok = greedy_token_host(last)
+            else:
+                self._rng, sub = jax.random.split(self._rng)
+                tok = int(sample_token(sub, jnp.asarray(last[None]),
+                                       seq.request.sampling)[0])
             if self._append_token(seq, tok, now):
                 self._finish(seq, now)
 
@@ -383,6 +391,7 @@ class LLMEngine:
             self.spec_stats.accepted += int(n_acc.sum())
             if self.spec_cfg.min_acceptance > 0:  # else the window never drains
                 self._spec_window.append((k * len(group), int(n_acc.sum())))
+        self.spec_runner.clear_pending()
         self._maybe_disable_spec()
 
     def _emit_spec(self, ch: ChunkWork, row: np.ndarray, n_acc: int, k: int,
@@ -402,6 +411,11 @@ class LLMEngine:
         # everything past is dead (masked by length, rewritten on append)
         seq.num_computed = ch.start + emitted
         self.spec_stats.emitted += emitted
+        # quantized stores: requantize exactly the emitted tokens into their
+        # pages now that acceptance is known (no-op on fp stores, which
+        # wrote back inside execute_spec) — before rollback/finish so
+        # prefix-cache publication sees complete pages
+        self.spec_runner.commit_writes(seq.request_id, emitted)
         if stop:
             self._finish(seq, now)
             return

@@ -4,8 +4,12 @@
   * GatheredRunner always exists — the correctness reference, and the only
     path for prefill and for model families the paged path doesn't cover.
   * PagedRunner exists when the stack is pure global attention
-    (``paged_decode_supported``), KV-quant-at-rest is off, and the
-    ``execution_backend`` config allows it.
+    (``paged_decode_supported``) and the ``execution_backend`` config allows
+    it. ``kv_quant`` no longer disqualifies it: KIVI-quantized caches are a
+    native storage format of the paged path (uint8 code pages + scale/zero
+    planes, dequantized in-VMEM by the quantized paged-attention kernel —
+    docs/kv_quant.md). Only quant configs the page layout cannot hold
+    (GEAR residuals, non-KIVI grouping axes) fall back to gathered.
 """
 from repro.core.executor.base import ExecBatch, ModelRunner, marshal_batch  # noqa: F401
 from repro.core.executor.gathered import GatheredRunner  # noqa: F401
@@ -29,13 +33,15 @@ def make_runners(model, params, engine_cfg, store):
     gathered = GatheredRunner(model, params, engine_cfg, store)
     paged = None
     eligible = (model.decode_paged is not None
-                and engine_cfg.kv_quant is None
                 and store.attn_kv_leaves()
-                and "state" not in store.kinds)
+                and "state" not in store.kinds
+                and (engine_cfg.kv_quant is None or store.quantized))
     if backend in ("auto", "paged", "speculative") and eligible:
         paged = PagedRunner(model, params, engine_cfg, store)
     if backend in ("paged", "speculative") and paged is None:
         raise ValueError(
             f"execution_backend={backend!r} but the model has no paged "
-            "decode path (needs a pure global-attention stack, no kv_quant)")
+            "decode path (needs a pure global-attention stack; kv_quant "
+            "additionally needs the KIVI default axes — K per-channel, V "
+            "per-token — and no GEAR residual)")
     return gathered, paged

@@ -4,9 +4,12 @@ Each step gathers the scheduled sequences' pages into a dense (B, W) cache
 window (numpy memcpy on CPU), runs the jitted ``model.extend`` (decodes are
 chunks of length 1 — SplitFuse unified batching), then scatters the newly
 written positions back to their pages. This is the correctness reference and
-the only path for prefill, state-mixer models (Mamba/xLSTM/whisper), MLA,
-and KV-quantized stores; all window-staging traffic it generates is charged
-to ``PagedModelState.host_copy_bytes``.
+the only path for prefill and state-mixer models (Mamba/xLSTM/whisper) and
+MLA; all window-staging traffic it generates is charged to
+``PagedModelState.host_copy_bytes``. KV-quantized stores are transparent
+here: ``gather`` stages dequantized windows and ``scatter`` requantizes the
+written pages (state.py), so this stays the parity reference for the
+quantized paged backend too (docs/kv_quant.md).
 """
 from __future__ import annotations
 

@@ -13,6 +13,16 @@ Mirror coherency: any engine-side page mutation (prefill scatter, CoW copy,
 host-tier restore) bumps ``store.version`` and records dirty block ids; the
 next paged step re-uploads just those blocks (full re-upload when most of
 the pool is dirty). In steady decode-only phases nothing is uploaded at all.
+
+Quantized stores (``EngineConfig.kv_quant``, docs/kv_quant.md) change two
+things: mirror leaves become {"codes", "scale", "zero"} uint8+f16 triples
+(same kernel layout, ~2x fewer HBM bytes at 8-bit), and the decode write
+moves into fp staging — each step marshals the still-filling page of every
+sequence as a full-precision TAIL operand (``call_pages``), the quantized
+kernel attends packed pages + staged tail + the step's own K/V, and a page
+only packs (and dirties the mirror) when its last slot fills. Steady decode
+therefore uploads one block per sequence every ``block_size`` tokens, not
+per step (measured in benchmarks/bench_kv_quant.py).
 """
 from __future__ import annotations
 
@@ -24,23 +34,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor.base import ExecBatch, ModelRunner
-from repro.core.executor.state import PagedModelState
+from repro.core.executor.state import PagedModelState, pad_pow2
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_blocks(leaf, blocks, payload):
-    """In-place per-block mirror update: leaf (KV, NB, P, D),
-    blocks (n,), payload (KV, n, P, D)."""
-    return leaf.at[:, blocks].set(payload)
+    """In-place per-block mirror update: leaf (KV, NB, P, D), blocks (n,),
+    payload (KV, n, P, D). Pytree-aware so a quantized leaf's
+    codes+scale+zero planes update in ONE dispatch."""
+    return jax.tree.map(lambda l, p: l.at[:, blocks].set(p), leaf, payload)
 
 
-def _pad_pow2(blocks: np.ndarray) -> np.ndarray:
-    """Pad the dirty-block list to a pow2 length (repeat first id — duplicate
-    writes of identical payloads are idempotent) to bound jit cache size."""
-    n = 1
-    while n < len(blocks):
-        n *= 2
-    return np.concatenate([blocks, np.repeat(blocks[:1], n - len(blocks))])
 
 
 class PagedRunner(ModelRunner):
@@ -63,16 +67,30 @@ class PagedRunner(ModelRunner):
         # telemetry: what replaced host_copy_bytes on this path
         self.mirror_upload_bytes = 0
         self.writeback_bytes = 0
+        # quantized stores only: per-step fp staged-tail uploads (the
+        # still-filling page per sequence) — the dominant host->device
+        # traffic of the quantized path, O(B * block_size) per step
+        self.tail_upload_bytes = 0
         self.steps = 0
 
     # ------------------------------------------------------------------
     def _leaf_kernel_layout(self, idx: int, r: int,
-                            blocks: Optional[np.ndarray] = None) -> np.ndarray:
-        """(NB|n, bs, KV, D) slice of store leaf -> kernel (KV, NB|n, bs, D)."""
-        arr = self.store.stores[idx][r]
-        if blocks is not None:
-            arr = arr[blocks]
-        return np.ascontiguousarray(np.transpose(arr, (2, 0, 1, 3)))
+                            blocks: Optional[np.ndarray] = None):
+        """(NB|n, bs, KV, D) slice of store leaf -> kernel (KV, NB|n, bs, D).
+
+        Quantized leaves return {"codes", "scale", "zero"} in the same
+        kernel layout — the mirror uploads the store's bytes verbatim, which
+        is where the HBM capacity win lives (~2x at 8-bit)."""
+        def t(a):
+            if blocks is not None:
+                a = a[blocks]
+            return np.ascontiguousarray(np.transpose(a, (2, 0, 1, 3)))
+
+        if idx in self.store.qplanes:
+            return {"codes": t(self.store.stores[idx][r]),
+                    "scale": t(self.store.qplanes[idx]["scale"][r]),
+                    "zero": t(self.store.qplanes[idx]["zero"][r])}
+        return t(self.store.stores[idx][r])
 
     def sync(self) -> None:
         """Bring the device mirror up to date with the host store."""
@@ -89,32 +107,81 @@ class PagedRunner(ModelRunner):
             for (si, lkey, name, idx) in self.leaves:
                 for r in range(reps[si]):
                     leaf = self._leaf_kernel_layout(idx, r)
-                    self.mirror_upload_bytes += leaf.nbytes
+                    self.mirror_upload_bytes += sum(
+                        a.nbytes for a in jax.tree.leaves(leaf))
                     pages[si][f"r{r}"].setdefault(lkey, {})[name] = \
-                        jnp.asarray(leaf)
+                        jax.tree.map(jnp.asarray, leaf)
             self._pages = tuple(pages)
         elif len(dirty):
-            blocks = _pad_pow2(dirty)
+            # pad to pow2 (repeat first id — duplicate writes of identical
+            # payloads are idempotent) to bound the jit cache size
+            blocks = pad_pow2(dirty)
             blocks_j = jnp.asarray(blocks)
-            # rebuild containers (leaves shared) so in-place edits are safe
-            pages = jax.tree.map(lambda x: x, list(self._pages))
+            # one payload tree mirroring the pages structure -> ONE donated
+            # _write_blocks dispatch for the whole step's dirty set
+            payload = [
+                {f"r{r}": {} for r in range(reps[si])}
+                for si in range(len(self.model.cfg.stages))]
+            for (si, lkey, name, idx) in self.leaves:
+                for r in range(reps[si]):
+                    leaf = self._leaf_kernel_layout(idx, r, blocks)
+                    self.mirror_upload_bytes += sum(
+                        a.nbytes for a in jax.tree.leaves(leaf))
+                    payload[si][f"r{r}"].setdefault(lkey, {})[name] = leaf
             try:
-                for (si, lkey, name, idx) in self.leaves:
-                    for r in range(reps[si]):
-                        payload = self._leaf_kernel_layout(idx, r, blocks)
-                        self.mirror_upload_bytes += payload.nbytes
-                        pages[si][f"r{r}"][lkey][name] = _write_blocks(
-                            pages[si][f"r{r}"][lkey][name], blocks_j,
-                            jnp.asarray(payload))
+                self._pages = _write_blocks(self._pages, blocks_j,
+                                            tuple(payload))
             except Exception:
-                # earlier leaves were already donated into _write_blocks;
-                # drop the half-updated mirror so the next sync re-uploads
+                # the mirror was donated into the failed call;
+                # drop it so the next sync re-uploads from scratch
                 self._pages = None
                 self._synced_version = -1
                 raise
-            self._pages = tuple(pages)
         self.store.dirty_blocks.clear()
         self._synced_version = self.store.version
+
+    # ------------------------------------------------------------------
+    def call_pages(self, tables: np.ndarray, lengths: np.ndarray, C: int):
+        """The pages argument for one quantized step: mirror leaves plus a
+        per-leaf staged TAIL (B, P + C, KV, D) — each sequence's still-
+        filling page served full-precision from the host staging store,
+        with C empty slots the model fills with the step's own K/V
+        (attention.py ``_attn_chunk_quant``). fp stores pass the mirror
+        through untouched."""
+        if not self.store.quantized:
+            return self._pages
+        bs = self.cfg.block_size
+        B = len(lengths)
+        part = np.take_along_axis(
+            tables.astype(np.int64),
+            (lengths.astype(np.int64) // bs)[:, None], axis=1)[:, 0]
+        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
+        pages = jax.tree.map(lambda x: x, list(self._pages))
+        for (si, lkey, name, idx) in self.leaves:
+            stage = self.store.qstage[idx][:, part]  # (R, B, bs, KV, D)
+            pad = np.zeros((stage.shape[0], B, C) + stage.shape[3:],
+                           stage.dtype)
+            tail = np.concatenate([stage, pad], axis=2)  # (R, B, bs+C, KV, D)
+            self.tail_upload_bytes += tail.nbytes
+            for r in range(reps[si]):
+                leaf = dict(pages[si][f"r{r}"][lkey][name])
+                leaf["tail"] = jnp.asarray(tail[r])
+                pages[si][f"r{r}"][lkey][name] = leaf
+        return tuple(pages)
+
+    def strip_tails(self, new_pages):
+        """Drop per-step tail operands before storing the mirror (sync's
+        block-indexed updates must only ever see (·, NB, ·, ·) leaves)."""
+        if not self.store.quantized:
+            return new_pages
+        pages = jax.tree.map(lambda x: x, list(new_pages))
+        for si in range(len(pages)):
+            for rkey, layers in pages[si].items():
+                for lkey, kv in layers.items():
+                    for name in kv:
+                        kv[name] = {k: v for k, v in kv[name].items()
+                                    if k != "tail"}
+        return tuple(pages)
 
     # ------------------------------------------------------------------
     def supports(self, batch: ExecBatch) -> bool:
@@ -127,7 +194,8 @@ class PagedRunner(ModelRunner):
         lengths = batch.cache_lens  # decode: start == tokens already cached
         try:
             logits, new_pages, writes = self._decode_jit(
-                self.params, jnp.asarray(batch.tokens), self._pages,
+                self.params, jnp.asarray(batch.tokens),
+                self.call_pages(batch.tables, lengths, 1),
                 jnp.asarray(batch.tables), jnp.asarray(lengths),
                 impl=self.cfg.paged_impl)
         except Exception:
@@ -136,9 +204,10 @@ class PagedRunner(ModelRunner):
             self._pages = None
             self._synced_version = -1
             raise
-        self._pages = new_pages
+        self._pages = self.strip_tails(new_pages)
         # O(token) writeback keeps the host store authoritative; the device
-        # mirror already holds the same write (done in-place by decode_paged)
+        # mirror already holds the same write (done in-place by decode_paged;
+        # quantized stores instead stage it fp until the page fills)
         self.writeback_bytes += self.writeback_tokens(
             batch.tables, lengths, 1, writes, len(batch.chunks))
         self.steps += 1
@@ -159,11 +228,11 @@ class PagedRunner(ModelRunner):
         off = (pos % bs).reshape(-1)
         writes_np = jax.device_get(writes)
         reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
-        nbytes = 0
+        idxs, payloads = [], []
         for (si, lkey, name, idx) in self.leaves:
-            payload = np.stack(
+            idxs.append(idx)
+            payloads.append(np.stack(
                 [np.asarray(writes_np[si][f"r{r}"][lkey][name])[:B].reshape(
                     (B * C,) + writes_np[si][f"r{r}"][lkey][name].shape[-2:])
-                 for r in range(reps[si])])  # (R, B*C, KV, D)
-            nbytes += self.store.write_token(idx, blk, off, payload)
-        return nbytes
+                 for r in range(reps[si])]))  # (R, B*C, KV, D)
+        return self.store.write_token_group(idxs, blk, off, payloads)

@@ -30,7 +30,7 @@ blocks and (b) clamping ``draft_computed`` so rejected draft KV is rewritten.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +83,11 @@ class SpeculativeRunner(ModelRunner):
         self.writeback_bytes = 0
         self.draft_catchup_tokens = 0
         self.draft_resets = 0
+        # quantized stores: verify's K/V writes are held here until the
+        # engine knows acceptance (see commit_writes) — a page requantize
+        # must never see rejected tokens, whose garbage would perturb the
+        # page's group scales and so the *accepted* tokens' codes
+        self._pending_writes: Optional[Tuple] = None
 
     # ------------------------------------------------------------------
     def _init_draft_pages(self):
@@ -254,16 +259,25 @@ class SpeculativeRunner(ModelRunner):
         ver_tokens = jnp.concatenate([tok0, d_toks], axis=1)  # (B, k+1)
         try:
             t_logits, new_pages, writes = self._verify_jit(
-                self.params, ver_tokens, self.paged._pages, tables_j, lens_j,
-                impl=self.cfg.paged_impl)
+                self.params, ver_tokens,
+                self.paged.call_pages(tables, lengths, k + 1),
+                tables_j, lens_j, impl=self.cfg.paged_impl)
         except Exception:
             # target mirror was donated; drop it so the next step re-uploads
             self.paged._pages = None
             self.paged._synced_version = -1
             raise
-        self.paged._pages = new_pages
-        self.writeback_bytes += self.paged.writeback_tokens(
-            batch.tables, batch.cache_lens, k + 1, writes, B)
+        self.paged._pages = self.paged.strip_tails(new_pages)
+        if self.store.quantized:
+            # writeback deferred to commit_writes: only tokens that were
+            # actually emitted may join a page's quantization groups
+            self._pending_writes = (
+                jax.device_get(writes),
+                {ch.seq.request_id: b for b, ch in enumerate(batch.chunks)},
+                batch.tables.copy(), batch.cache_lens.astype(np.int64))
+        else:
+            self.writeback_bytes += self.paged.writeback_tokens(
+                batch.tables, batch.cache_lens, k + 1, writes, B)
         self.steps += 1
         # padding rows sliced off ON DEVICE; logits stay device-resident so
         # the engine's jitted rejection sampler consumes them without a
@@ -271,6 +285,48 @@ class SpeculativeRunner(ModelRunner):
         return d_toks[:B], d_logits[:B], t_logits[:B]
 
     # ------------------------------------------------------------------
+    def commit_writes(self, request_id: str, emitted: int) -> None:
+        """Quantized-store host writeback of one sequence's ACCEPTED run.
+
+        Verify computed K/V for the fed tokens at positions
+        [start, start + k]; exactly the first ``emitted`` of those became
+        real tokens (the corrected/bonus token's K/V is next step's write).
+        They go to the fp staging store, and any page the accepted run
+        FILLS packs right here — had a rejected token been written too, it
+        could fill (and pack) a page with garbage in its group statistics,
+        which the plain paged backend would never produce. Writing only
+        after acceptance keeps spec == paged page bytes for any draft.
+        No-op on fp stores (those wrote back inside ``execute_spec``). The
+        engine calls this before rollback / finish so prefix-cache
+        publication never sees pages missing KV."""
+        if not self.store.quantized or self._pending_writes is None \
+                or emitted <= 0:
+            return
+        writes_np, rows, tables, lens = self._pending_writes
+        b = rows.get(request_id)
+        if b is None:
+            return
+        bs = self.cfg.block_size
+        pos = lens[b] + np.arange(emitted)
+        blk = tables[b].astype(np.int64)[pos // bs]
+        off = pos % bs
+        reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
+        idxs, payloads = [], []
+        for (si, lkey, name, idx) in self.paged.leaves:
+            idxs.append(idx)
+            payloads.append(np.stack(
+                [np.asarray(writes_np[si][f"r{r}"][lkey][name])[b, :emitted]
+                 for r in range(reps[si])]))  # (R, emitted, KV, D)
+        self.writeback_bytes += self.store.write_token_group(idxs, blk, off,
+                                                             payloads)
+
+    def clear_pending(self) -> None:
+        """Release the stashed verify K/V once a spec step's emits are all
+        committed — otherwise the last step's device_get'd writes (and table
+        snapshot) stay referenced for the engine's lifetime, e.g. after the
+        acceptance floor auto-disables speculation."""
+        self._pending_writes = None
+
     def commit(self, seq, start: int, k: int, accepted: int) -> None:
         """Post-acceptance draft rollback for one sequence.
 

@@ -14,16 +14,46 @@ reads them:
 Mutations bump ``version`` and record the touched block ids in
 ``dirty_blocks`` so device-resident mirrors (PagedRunner) can invalidate or
 incrementally re-sync instead of re-uploading the whole store.
+
+KIVI quantization at rest (``EngineConfig.kv_quant``, docs/kv_quant.md):
+when the cache is a pure attention-K/V page set, the page stores themselves
+hold uint8 codes plus per-page scale/zero planes (keys grouped per channel,
+values per token — core/kv_quant.py) instead of fp pages. Following KIVI's
+streaming design, a page quantizes exactly ONCE — when its last slot is
+written ("fill") — through the ``kernels/kv_quant`` pack op, with complete
+group statistics; until then the page's tokens live full-precision in a
+staging store (``qstage``) and reach attention through the quantized
+kernel's fp tail operand / the gathered window overlay. ``block_quantized``
+tracks which side of that line each block is on, and every reader goes
+through the same bytes: ``gather`` dequantizes full pages and overlays
+staged partial pages, the PagedRunner mirror uploads codes+planes verbatim
+and marshals staged tails per step. Only fills dirty the device mirror, so
+steady decode uploads nothing for block_size-1 of every block_size tokens.
+Caches the paged path cannot parse (MLA latents, state mixers) keep fp
+stores and the legacy quantize-roundtrip in ``scatter``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kv_quant import QuantConfig, dequantize, quantize
+
+
+def pad_pow2(x: np.ndarray) -> np.ndarray:
+    """Pad axis 0 to a pow2 length by repeating the first element — bounds
+    the jit-cache size of shape-polymorphic device calls (mirror block
+    updates, page packs). Duplicates are harmless: packed/written payloads
+    are idempotent per id, and pack callers slice padding back off."""
+    n = 1
+    while n < len(x):
+        n *= 2
+    if n == len(x):
+        return x
+    return np.concatenate([x, np.repeat(x[:1], n - len(x), axis=0)])
 
 
 class PagedModelState:
@@ -58,6 +88,37 @@ class PagedModelState:
         # mirror-coherency bookkeeping (consumed by PagedRunner.sync)
         self.version = 0
         self.dirty_blocks: Set[int] = set()
+        # KIVI quantized-at-rest page stores (docs/kv_quant.md): uint8 codes
+        # replace the fp leaf arrays, per-page scale/zero planes ride in
+        # qplanes. Only when every paged leaf is a plain attention K/V with
+        # the KIVI default axes — GEAR residuals and MLA latents keep fp
+        # stores and the legacy scatter roundtrip.
+        self.quant: Optional[QuantConfig] = engine_cfg.kv_quant
+        self.qaxis: Dict[int, str] = {}
+        self.qplanes: Dict[int, Dict[str, np.ndarray]] = {}
+        self.qstage: Dict[int, np.ndarray] = {}
+        self.qdtype: Dict[int, np.dtype] = {}
+        self.quantized = bool(
+            self.quant is not None and self.quant.residual_rank == 0
+            and self.quant.key_axis == "channel"
+            and self.quant.value_axis == "token"
+            and self.attn_kv_leaves())
+        # block -> "codes+planes are current" (page filled & packed); a
+        # False block's live tokens are served from the fp staging store
+        self.block_quantized = np.zeros(engine_cfg.num_blocks, bool)
+        if self.quantized:
+            for (_, _, name, idx) in self.attn_kv_leaves():
+                R, NB, P = self.stores[idx].shape[:3]
+                KV, D = self.stores[idx].shape[3:]
+                axis = "channel" if name == "k" else "token"
+                pshape = (R, NB, 1, KV, D) if axis == "channel" \
+                    else (R, NB, P, KV, 1)
+                self.qaxis[idx] = axis
+                self.qdtype[idx] = np.dtype(self.stores[idx].dtype)
+                self.qstage[idx] = self.stores[idx]  # fp staging (host-side)
+                self.stores[idx] = np.zeros((R, NB, P, KV, D), np.uint8)
+                self.qplanes[idx] = {"scale": np.zeros(pshape, np.float16),
+                                     "zero": np.zeros(pshape, np.float16)}
 
     # ------------------------------------------------------------------
     def _touch(self, blocks) -> None:
@@ -65,14 +126,93 @@ class PagedModelState:
         self.dirty_blocks.update(int(b) for b in np.atleast_1d(blocks))
 
     # ------------------------------------------------------------------
+    # quantized-page primitives (shared by gather/scatter/write_token so
+    # every backend reads and writes the SAME bytes — the parity anchor)
+    # ------------------------------------------------------------------
+    def _requant_group(self, items: List[Tuple[int, np.ndarray, np.ndarray]]
+                       ) -> None:
+        """Quantize whole pages back into the store through the
+        kernels/kv_quant pack op. ``items``: (leaf idx, blocks, pages
+        (R, n, bs, KV, D)) triples. Leaves sharing a grouping axis and page
+        shape CONCATENATE into one pack-op dispatch — on a decode step that
+        is one call for every layer's K pages and one for every V (pow2
+        page-count padding bounds the op's jit cache)."""
+        from repro.kernels.kv_quant import quantize_kv_pages
+
+        by_key: Dict[Tuple, List] = {}
+        for idx, blocks, pages in items:
+            R, n, bs, KV, D = pages.shape
+            by_key.setdefault((self.qaxis[idx], bs, D), []).append(
+                (idx, blocks, pages))
+        for (axis, bs, D), group in by_key.items():
+            mats = [p.astype(np.float32).transpose(1, 0, 3, 2, 4).reshape(
+                -1, bs, D) for (_, _, p) in group]
+            sizes = [len(m) for m in mats]
+            x = pad_pow2(np.concatenate(mats) if len(mats) > 1 else mats[0])
+            codes, scale, zero = quantize_kv_pages(
+                jnp.asarray(x), bits=self.quant.bits, axis=axis)
+            codes = np.asarray(codes)
+            scale = np.asarray(scale)
+            zero = np.asarray(zero)
+            gP, gC = scale.shape[1:]
+            at = 0
+            for (idx, blocks, pages), sz in zip(group, sizes):
+                R, n = pages.shape[:2]
+                KV = pages.shape[3]
+                self.stores[idx][:, blocks] = codes[at: at + sz].reshape(
+                    n, R, KV, bs, D).transpose(1, 0, 3, 2, 4)
+                for pname, plane in (("scale", scale), ("zero", zero)):
+                    self.qplanes[idx][pname][:, blocks] = \
+                        plane[at: at + sz].reshape(
+                            n, R, KV, gP, gC).transpose(
+                                1, 0, 3, 2, 4).astype(np.float16)
+                at += sz
+
+    def _quant_write_group(self, idxs: List[int], blocks: np.ndarray,
+                           offsets: np.ndarray,
+                           payloads: List[np.ndarray]) -> None:
+        """Place token values (``payloads[j]``: (R, n, KV, D) for leaf
+        ``idxs[j]``) into the fp staging stores, then pack every page whose
+        LAST slot was just written. A page quantizes exactly once, from a
+        complete staging page — so write batching (one token per step vs a
+        speculative commit's whole accepted run) cannot change the packed
+        bytes, which is what keeps every backend reading identical pages.
+        Writes to partially-filled pages touch only host staging: no pack
+        dispatch, no mirror dirtying."""
+        for idx, payload in zip(idxs, payloads):
+            stage = self.qstage[idx]
+            stage[:, blocks, offsets] = payload.astype(stage.dtype)
+        ublocks = np.unique(blocks)
+        # any write re-opens the page; a fill below re-quantizes it
+        self.block_quantized[ublocks] = False
+        filled = np.unique(blocks[offsets == self.cfg.block_size - 1])
+        if len(filled):
+            self._requant_group(
+                [(idx, filled, self.qstage[idx][:, filled]) for idx in idxs])
+            self.block_quantized[filled] = True
+            self._touch(filled)
+
+    # ------------------------------------------------------------------
     def gather(self, tables: np.ndarray, slots: np.ndarray):
         """tables: (B, nmax) int block ids; slots: (B,) int state slots.
         Returns the model cache pytree with leaves (R, B, W, ...) / (R, B, ...)."""
         out = []
         W = self.cfg.max_model_len
-        for kind, store in zip(self.kinds, self.stores):
+        for li, (kind, store) in enumerate(zip(self.kinds, self.stores)):
             if kind == "paged":
-                g = store[:, tables]  # (R, B, nmax, bs, ...)
+                if li in self.qplanes:
+                    # the gathered backend reads exactly what the quantized
+                    # kernel serves: dequantized codes for packed blocks,
+                    # fp staging for still-filling ones
+                    sc = self.qplanes[li]["scale"][:, tables].astype(np.float32)
+                    zr = self.qplanes[li]["zero"][:, tables].astype(np.float32)
+                    g = (store[:, tables].astype(np.float32) * sc + zr
+                         ).astype(self.qdtype[li])
+                    qm = self.block_quantized[tables]  # (B, nmax)
+                    g = np.where(qm[None, :, :, None, None, None], g,
+                                 self.qstage[li][:, tables])
+                else:
+                    g = store[:, tables]  # (R, B, nmax, bs, ...)
                 R, B, nb, bs = g.shape[:4]
                 win = g.reshape((R, B, nb * bs) + g.shape[4:])[:, :, :W]
                 self.host_copy_bytes += win.nbytes
@@ -90,7 +230,24 @@ class PagedModelState:
         bs = self.cfg.block_size
         leaves = jax.tree_util.tree_flatten(new_cache)[0]
         touched: Set[int] = set()
-        for kind, store, leaf in zip(self.kinds, self.stores, leaves):
+        qidxs = [li for li, k in enumerate(self.kinds)
+                 if k == "paged" and li in self.qplanes]
+        for b, (st, ln) in enumerate(zip(starts, lengths)):
+            if not qidxs or ln <= 0:
+                continue
+            pos = np.arange(st, st + ln)
+            blk = tables[b, pos // bs]
+            off = pos % bs
+            # quantized leaves write together: staging + fill-packing
+            # (fills dirty the mirror inside _quant_write_group; partial
+            # pages reach readers via staging, not the mirror)
+            payloads = [np.asarray(leaves[li])[:, b, pos] for li in qidxs]
+            self._quant_write_group(qidxs, blk, off, payloads)
+            self.host_copy_bytes += sum(p.nbytes for p in payloads)
+        for li, (kind, store, leaf) in enumerate(zip(self.kinds, self.stores,
+                                                     leaves)):
+            if li in self.qplanes:
+                continue
             arr = np.asarray(leaf)
             if kind == "paged":
                 for b, (st, ln) in enumerate(zip(starts, lengths)):
@@ -101,14 +258,15 @@ class PagedModelState:
                     off = pos % bs
                     payload = arr[:, b, pos]
                     if quant is not None:
-                        # KIVI quantize-at-rest roundtrip (layout unchanged;
-                        # packed int pages are the Pallas kernel's concern)
+                        # legacy roundtrip for caches the quantized page
+                        # layout cannot hold (MLA latents etc.)
                         axis = "channel" if payload.ndim >= 3 else "token"
                         codes, scale, zero = quantize(jnp.asarray(payload),
                                                       quant.bits, axis)
-                        payload = np.asarray(dequantize(codes, scale, zero),
-                                             dtype=arr.dtype)
-                    store[:, blk, off] = payload
+                        store[:, blk, off] = np.asarray(
+                            dequantize(codes, scale, zero), dtype=arr.dtype)
+                    else:
+                        store[:, blk, off] = payload
                     self.host_copy_bytes += payload.nbytes
                     touched.update(int(x) for x in np.unique(blk))
             else:
@@ -129,37 +287,125 @@ class PagedModelState:
 
         blocks/offsets: (B,); payload: (R, B, ...) per-repeat new-token values.
         Keeps the host store authoritative for CoW / export / prefix-cache
-        payloads without staging any window. Returns bytes written. Does NOT
-        dirty the mirror — the caller's device mirror already holds the same
-        write (it was applied in-place by ``decode_paged``)."""
-        store = self.stores[leaf_idx]
-        store[:, blocks, offsets] = payload
-        return payload.nbytes
+        payloads without staging any window. Returns bytes written.
+
+        fp stores do NOT dirty the mirror — the caller's device mirror
+        already holds the same write (applied in-place by ``decode_paged``).
+        Quantized stores write fp staging (the mirror serves those tokens
+        from the per-step staged tail) and only a page FILL packs codes and
+        dirties the mirror — block_size-1 of every block_size decode steps
+        cost zero pack/upload work."""
+        return self.write_token_group([leaf_idx], blocks, offsets, [payload])
+
+    def write_token_group(self, leaf_idxs: List[int], blocks: np.ndarray,
+                          offsets: np.ndarray,
+                          payloads: List[np.ndarray]) -> int:
+        """``write_token`` across several leaves sharing one (block, offset)
+        token layout — the per-step decode writeback. Batching matters for
+        quantized stores: all leaves' page fills pack in (at most) one
+        pack-op dispatch per grouping axis."""
+        nbytes = 0
+        q_idxs: List[int] = []
+        q_payloads: List[np.ndarray] = []
+        for idx, payload in zip(leaf_idxs, payloads):
+            nbytes += payload.nbytes
+            if idx in self.qplanes:
+                q_idxs.append(idx)
+                q_payloads.append(payload)
+            else:
+                self.stores[idx][:, blocks, offsets] = payload
+        if q_idxs:
+            self._quant_write_group(q_idxs, np.asarray(blocks),
+                                    np.asarray(offsets), q_payloads)
+        return nbytes
 
     def copy_block(self, src: int, dst: int) -> None:
-        for kind, store in zip(self.kinds, self.stores):
+        for li, (kind, store) in enumerate(zip(self.kinds, self.stores)):
             if kind == "paged":
                 store[:, dst] = store[:, src]
+                if li in self.qplanes:
+                    for plane in self.qplanes[li].values():
+                        plane[:, dst] = plane[:, src]
+                    self.qstage[li][:, dst] = self.qstage[li][:, src]
+        self.block_quantized[dst] = self.block_quantized[src]
         self._touch([dst])
 
     def block_payload(self, block: int):
-        """Serialize one block's pages across layers (host-tier demotion)."""
-        return [store[:, block].copy() for kind, store in
-                zip(self.kinds, self.stores) if kind == "paged"]
+        """Serialize one block's pages across layers (host-tier demotion /
+        migration). Quantized leaves serialize (codes, scale, zero) — plus
+        the fp staging page ONLY while the block is still filling (a packed
+        block is read from its codes, so shipping staging would make
+        demotion/migration payloads larger than the fp16 pages quantization
+        replaces) — and one trailing ``block_quantized`` flag."""
+        out = []
+        packed = bool(self.block_quantized[block])
+        for li, (kind, store) in enumerate(zip(self.kinds, self.stores)):
+            if kind != "paged":
+                continue
+            if li in self.qplanes:
+                entry = (store[:, block].copy(),
+                         self.qplanes[li]["scale"][:, block].copy(),
+                         self.qplanes[li]["zero"][:, block].copy())
+                if not packed:
+                    entry += (self.qstage[li][:, block].copy(),)
+                out.append(entry)
+            else:
+                out.append(store[:, block].copy())
+        if self.quantized:
+            out.append(packed)
+        return out
 
     def restore_block(self, block: int, payload) -> int:
         i = 0
         nbytes = 0
-        for kind, store in zip(self.kinds, self.stores):
+        for li, (kind, store) in enumerate(zip(self.kinds, self.stores)):
             if kind == "paged":
-                store[:, block] = payload[i]
-                nbytes += payload[i].nbytes
+                if li in self.qplanes:
+                    codes, scale, zero = payload[i][:3]
+                    store[:, block] = codes
+                    self.qplanes[li]["scale"][:, block] = scale
+                    self.qplanes[li]["zero"][:, block] = zero
+                    if len(payload[i]) > 3:
+                        self.qstage[li][:, block] = payload[i][3]
+                    else:
+                        # packed payload shipped no staging: rebuild it from
+                        # the codes so a later re-open (spec rollback into
+                        # this block) still serves sane values from staging
+                        self.qstage[li][:, block] = (
+                            codes.astype(np.float32)
+                            * scale.astype(np.float32)
+                            + zero.astype(np.float32)
+                        ).astype(self.qdtype[li])
+                    nbytes += sum(a.nbytes for a in payload[i])
+                else:
+                    store[:, block] = payload[i]
+                    nbytes += payload[i].nbytes
                 i += 1
+        if self.quantized:
+            self.block_quantized[block] = payload[-1]
         self._touch([block])
         return nbytes
 
     def kv_bytes_per_block(self) -> int:
-        return sum(int(np.prod(s.shape[2:])) * s.dtype.itemsize * s.shape[0]
+        """Actual bytes one block occupies across layers — for quantized
+        stores that is codes + scale/zero planes, the capacity win the
+        bench reports (docs/kv_quant.md)."""
+        total = 0
+        for li, (kind, store) in enumerate(zip(self.kinds, self.stores)):
+            if kind != "paged":
+                continue
+            total += int(np.prod(store.shape[2:])) * store.dtype.itemsize \
+                * store.shape[0]
+            if li in self.qplanes:
+                total += sum(
+                    int(np.prod(p.shape[2:])) * p.dtype.itemsize * p.shape[0]
+                    for p in self.qplanes[li].values())
+        return total
+
+    def kv_fp16_bytes_per_block(self) -> int:
+        """What the same block would occupy as fp16 pages — the baseline
+        for the quantized-capacity claim."""
+        return sum(int(np.prod(s.shape[2:])) * 2 * s.shape[0]
                    for k, s in zip(self.kinds, self.stores) if k == "paged")
 
     def state_payload(self, slot: int):

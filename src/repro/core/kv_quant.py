@@ -93,10 +93,18 @@ def quant_error(x, bits: int, axis_kind: str) -> float:
 
 
 def compression_ratio(bits: int, residual_rank: int, tokens: int, channels: int,
-                      base_bits: int = 16) -> float:
+                      axis: str = "channel", base_bits: int = 16,
+                      scale_bits: int = 16) -> float:
+    """Stored-bits ratio of fp caching vs quantized (codes + scale/zero).
+
+    One (scale, zero) pair per GROUP: per-channel grouping reduces over
+    tokens, so there are ``channels`` groups; per-token grouping has
+    ``tokens`` groups. (The old ``2 * 16 * max(tokens, channels)`` charged
+    the larger axis regardless of grouping — over-counting per-token V
+    whenever tokens < channels and vice versa.)"""
+    groups = channels if axis == "channel" else tokens
     base = tokens * channels * base_bits
     quant = tokens * channels * bits
-    # scales+zeros: one f16 pair per group
-    quant += 2 * 16 * max(tokens, channels)
+    quant += 2 * scale_bits * groups
     quant += residual_rank * (tokens + channels) * 16
     return base / quant

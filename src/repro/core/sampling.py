@@ -50,6 +50,18 @@ def sample_token(rng, logits, params: SamplingParams):
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
 
 
+def greedy_token_host(logits_row) -> int:
+    """Host-side equivalent of ``sample_token``'s greedy branch for ONE
+    row of already-host-resident logits (np and jnp argmax share first-max
+    tie-breaking). The engine's per-token fast path: greedy decode is ~40%
+    per-token device-dispatch overhead otherwise. Lives here so sampling
+    policy stays in one module — any change to greedy semantics must land
+    in both branches or spec==paged greedy parity breaks."""
+    import numpy as np
+
+    return int(np.argmax(logits_row))
+
+
 def sampling_probs(logits, params: SamplingParams):
     """The exact distribution ``sample_token`` draws from: (..., V) probs.
 

@@ -1,5 +1,10 @@
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attend,
+    paged_attend_quant,
     paged_decode_attention,
+    paged_decode_attention_quant,
 )
-from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: F401
+from repro.kernels.paged_attention.ref import (  # noqa: F401
+    paged_attention_quant_ref,
+    paged_attention_ref,
+)

@@ -16,8 +16,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.paged_attention import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.paged_attention import (paged_attention,
+                                                           paged_attention_quant)
+from repro.kernels.paged_attention.ref import (paged_attention_quant_ref,
+                                               paged_attention_ref)
 
 
 def _resolve(impl: str) -> str:
@@ -54,4 +56,48 @@ def paged_attend(q, k_pages, v_pages, block_tables, lengths, *, scale: float,
     out = paged_decode_attention(
         qr, k_pages, v_pages, block_tables.astype(jnp.int32),
         lengths.astype(jnp.int32), scale=scale, impl=impl)
+    return out.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# quantized pages (KIVI at rest, docs/kv_quant.md)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("scale", "deq_dtype", "impl"))
+def paged_decode_attention_quant(q, k_pages, v_pages, k_tail, v_tail,
+                                 block_tables, lengths, tail_start, *,
+                                 scale: float, deq_dtype: str = "float32",
+                                 impl: str = "auto"):
+    """Kernel-layout entry for quantized pages. ``k_pages``/``v_pages`` are
+    {"codes", "scale", "zero"} dicts (codes (KV, NB, P, D) uint8, key planes
+    (KV, NB, 1, D), value planes (KV, NB, P, 1)); the fp ``*_tail``
+    (B, T, KV, D) carries the current chunk (see ref.py). ``deq_dtype`` is
+    the cache's logical dtype, a string so the jit key stays hashable."""
+    impl = _resolve(impl)
+    dt = jnp.dtype(deq_dtype)
+    args = (q, k_pages["codes"], k_pages["scale"], k_pages["zero"],
+            v_pages["codes"], v_pages["scale"], v_pages["zero"],
+            k_tail, v_tail, block_tables, lengths, tail_start)
+    if impl == "ref":
+        return paged_attention_quant_ref(*args, scale=scale, deq_dtype=dt)
+    return paged_attention_quant(*args, scale=scale, deq_dtype=dt,
+                                 interpret=(impl == "interpret"))
+
+
+def paged_attend_quant(q, k_pages, v_pages, k_tail, v_tail, block_tables,
+                       lengths, tail_start, *, scale: float,
+                       deq_dtype: str = "float32", impl: str = "auto"):
+    """Model-layout adapter for quantized pages: q (B, 1, H, D) ->
+    (B, 1, H, D), GQA regrouped exactly like ``paged_attend``. ``lengths``
+    counts valid tokens INCLUDING the tail tokens this row attends;
+    ``tail_start`` counts the tokens resident in the quantized pages."""
+    B, _, H, D = q.shape
+    KV = k_pages["codes"].shape[0]
+    G = H // KV
+    qr = q.reshape(B, KV, G, D)
+    out = paged_decode_attention_quant(
+        qr, k_pages, v_pages, k_tail, v_tail,
+        block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        tail_start.astype(jnp.int32), scale=scale, deq_dtype=deq_dtype,
+        impl=impl)
     return out.reshape(B, 1, H, D)

@@ -101,3 +101,126 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# quantized pages (KIVI at rest, survey §III.C): uint8 codes + scale/zero
+# planes stream HBM->VMEM instead of fp16 pages; dequantization happens
+# in-VMEM right before the score matmul, so the HBM read per page drops
+# ~2x at 8-bit while the compute path stays the fp online softmax above.
+# ---------------------------------------------------------------------------
+
+def _quant_kernel(block_tables_ref, lengths_ref, tail_start_ref,  # prefetch
+                  q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref, vz_ref,
+                  kt_ref, vt_ref,  # inputs
+                  o_ref,  # output
+                  m_ref, l_ref, acc_ref,  # VMEM scratch
+                  *, page_size: int, tail_len: int, scale: float, deq_dtype):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_pages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    # dequantize this page in VMEM; the round-trip through the cache's
+    # logical dtype matches what the gathered backend stages (ref.py)
+    k = (kc_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0].astype(jnp.float32)
+         + kz_ref[0, 0].astype(jnp.float32))  # (P, D), scale/zero (1, D)
+    v = (vc_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0].astype(jnp.float32)
+         + vz_ref[0, 0].astype(jnp.float32))  # (P, D), scale/zero (P, 1)
+    k = k.astype(deq_dtype).astype(jnp.float32)
+    v = v.astype(deq_dtype).astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # page slots only hold tokens below the tail split point; everything in
+    # [tail_start, lengths) is served full-precision from the tail operand
+    ts = tail_start_ref[b]
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    valid = pos < ts  # (1, P)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    pr = jnp.exp(s - m_new)
+    pr = jnp.where(valid, pr, 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(pr, axis=1, keepdims=True)
+    acc_new = acc_ref[...] * alpha + jax.lax.dot_general(
+        pr, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(p == np_pages - 1)
+    def _tail_and_finish():
+        kt = kt_ref[0, :, 0].astype(jnp.float32)  # (T, D)
+        vt = vt_ref[0, :, 0].astype(jnp.float32)
+        st = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        tpos = ts + jax.lax.broadcasted_iota(jnp.int32, (1, tail_len), 1)
+        tvalid = tpos < lengths_ref[b]  # (1, T)
+        st = jnp.where(tvalid, st, NEG_INF)
+        m_prev2 = m_ref[...]
+        m_fin = jnp.maximum(m_prev2, jnp.max(st, axis=1, keepdims=True))
+        a2 = jnp.exp(m_prev2 - m_fin)
+        pt = jnp.exp(st - m_fin)
+        pt = jnp.where(tvalid, pt, 0.0)
+        l_fin = l_ref[...] * a2 + jnp.sum(pt, axis=1, keepdims=True)
+        acc_fin = acc_ref[...] * a2 + jax.lax.dot_general(
+            pt, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0, 0] = (acc_fin / jnp.maximum(l_fin, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_quant(q, k_codes, k_scale, k_zero, v_codes, v_scale,
+                          v_zero, k_tail, v_tail, block_tables, lengths,
+                          tail_start, *, scale: float, deq_dtype=jnp.float32,
+                          interpret: bool = False):
+    """Quantized-page variant of ``paged_attention``; see ref.py for the
+    operand semantics. codes (KV, NB, P, D) uint8; k planes (KV, NB, 1, D);
+    v planes (KV, NB, P, 1); tails (B, T, KV, D) -> (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    P = k_codes.shape[2]
+    NP = block_tables.shape[1]
+    T = k_tail.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kv, p, bt, ln, ts: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, P, D), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, P, D), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, P, 1), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, P, 1), lambda b, kv, p, bt, ln, ts: (kv, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, T, 1, D), lambda b, kv, p, bt, ln, ts: (b, 0, kv, 0)),
+            pl.BlockSpec((1, T, 1, D), lambda b, kv, p, bt, ln, ts: (b, 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, kv, p, bt, ln, ts: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_quant_kernel, page_size=P, tail_len=T,
+                               scale=scale, deq_dtype=deq_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      tail_start.astype(jnp.int32),
+      q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, k_tail, v_tail)

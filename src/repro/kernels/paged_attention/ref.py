@@ -1,8 +1,18 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracles for paged decode attention (fp and quantized pages).
 
 Semantics: one query token per sequence attends over a paged KV cache.
 ``lengths[b]`` counts valid tokens (the page contents beyond it are garbage and
 must not influence the output). Pages are gathered by ``block_tables``.
+
+The quantized variant (``paged_attention_quant_ref``) reads KIVI pages —
+uint8 codes plus per-page scale/zero planes, keys grouped per channel and
+values per token (core/kv_quant.py, docs/kv_quant.md) — and dequantizes
+before the score math. The CURRENT chunk's K/V is not in the pages yet (it
+is quantized at rest only after the step's host writeback), so it arrives
+as a full-precision ``tail``: ``tail_start[b]`` tokens live in pages, tail
+token ``i`` sits at absolute position ``tail_start[b] + i``, and validity
+is still ``pos < lengths[b]`` — which is what lets the speculative verify
+fold C query rows over one shared tail.
 """
 from __future__ import annotations
 
@@ -24,6 +34,62 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, scale):
                    k.astype(jnp.float32)) * scale
     pos = jnp.arange(NP * P)[None, :]
     valid = pos < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bksd->bkgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def dequantize_page_leaves(codes, scale, zero, deq_dtype):
+    """uint8 codes (+ broadcastable scale/zero planes) -> values in the
+    cache's logical dtype.
+
+    The round-trip through ``deq_dtype`` is deliberate: the gathered backend
+    stages dequantized windows in the cache dtype (bf16), so the kernel must
+    see the same rounded values or greedy parity across backends breaks."""
+    x = codes.astype(jnp.float32) * scale.astype(jnp.float32) \
+        + zero.astype(jnp.float32)
+    return x.astype(deq_dtype)
+
+
+def paged_attention_quant_ref(q, k_codes, k_scale, k_zero, v_codes, v_scale,
+                              v_zero, k_tail, v_tail, block_tables, lengths,
+                              tail_start, *, scale, deq_dtype=jnp.float32):
+    """q: (B, KV, G, D); k_codes/v_codes: (KV, NB, P, D) uint8;
+    k_scale/k_zero: (KV, NB, 1, D) — per-channel key groups;
+    v_scale/v_zero: (KV, NB, P, 1) — per-token value groups;
+    k_tail/v_tail: (B, T, KV, D) full-precision current-chunk K/V;
+    block_tables: (B, NP) int32; lengths: (B,) valid tokens INCLUDING the
+    tail tokens this row may attend; tail_start: (B,) tokens resident in the
+    quantized pages (tail token i is at position tail_start + i).
+    -> (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    P = k_codes.shape[2]
+    NP = block_tables.shape[1]
+    T = k_tail.shape[1]
+    # gather FIRST, dequantize only the tables' pages — the pool is usually
+    # much larger than any one batch's working set
+    k = dequantize_page_leaves(k_codes[:, block_tables],
+                               k_scale[:, block_tables],
+                               k_zero[:, block_tables], deq_dtype)
+    v = dequantize_page_leaves(v_codes[:, block_tables],
+                               v_scale[:, block_tables],
+                               v_zero[:, block_tables], deq_dtype)
+    k = jnp.swapaxes(k, 0, 1).reshape(B, KV, NP * P, D)
+    v = jnp.swapaxes(v, 0, 1).reshape(B, KV, NP * P, D)
+    k = jnp.concatenate([k, jnp.swapaxes(k_tail.astype(k.dtype), 1, 2)], 2)
+    v = jnp.concatenate([v, jnp.swapaxes(v_tail.astype(v.dtype), 1, 2)], 2)
+    pos_pages = jnp.arange(NP * P)[None, :]  # page slots: absolute positions
+    pos_tail = tail_start[:, None] + jnp.arange(T)[None, :]
+    valid = jnp.concatenate(
+        [pos_pages < tail_start[:, None],  # page slots past the tail are dead
+         pos_tail < lengths[:, None]], axis=1)  # (B, S + T)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)

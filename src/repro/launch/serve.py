@@ -42,6 +42,11 @@ def main():
                          "(default: self-speculation, draft == target)")
     ap.add_argument("--spec-min-acceptance", type=float, default=0.0,
                     help="auto-disable speculation below this windowed rate")
+    ap.add_argument("--kv-quant-bits", type=int, default=0,
+                    help="KIVI-quantize KV pages at rest at this many bits "
+                         "(0 = off). Pure global-attention models keep the "
+                         "paged/speculative fast path on quantized pages "
+                         "(docs/kv_quant.md)")
     ap.add_argument("--debug", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -63,9 +68,13 @@ def main():
             num_draft_tokens=args.spec_k if args.spec_k is not None else 4,
             draft_model=draft_model, draft_params=draft_params,
             min_acceptance=args.spec_min_acceptance)
+    from repro.core.kv_quant import QuantConfig
+    kv_quant = QuantConfig(bits=args.kv_quant_bits) if args.kv_quant_bits \
+        else None
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
         execution_backend=args.backend, speculative=speculative,
+        kv_quant=kv_quant,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
     rng = np.random.default_rng(0)
@@ -88,11 +97,15 @@ def main():
                 f"({st.tokens_per_step:.1f} tok/spec-step"
                 + (f", disabled@{st.disabled_at_step}"
                    if st.disabled_at_step is not None else "") + ")")
+    quant = ""
+    if kv_quant is not None and engine.store.quantized:
+        quant = (f", kv_quant={kv_quant.bits}bit "
+                 f"({engine.store.kv_fp16_bytes_per_block() / engine.store.kv_bytes_per_block():.2f}x capacity vs fp16)")
     print(f"{args.arch}: {len(metrics)} requests, {gen} tokens, "
           f"{gen/dt:.1f} tok/s, {engine.steps} steps "
           f"({engine.paged_steps} paged), "
           f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
-          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms{spec}")
+          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms{spec}{quant}")
 
 
 if __name__ == "__main__":

@@ -398,6 +398,64 @@ def attn_decode(p, cfg, spec, x, cache, cache_len):
     return out, {"k": k_cache, "v": v_cache}
 
 
+def quantized_pages(pages) -> bool:
+    """Whether a paged K/V dict holds KIVI-quantized stores (codes + scale/
+    zero planes, docs/kv_quant.md) instead of raw fp page arrays."""
+    return isinstance(pages.get("k"), dict) and "codes" in pages["k"]
+
+
+def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
+                      impl: str = "auto"):
+    """C-token scoring against KIVI-quantized page stores (survey §III.C).
+
+    Pages hold uint8 codes + per-page scale/zero planes for every FILLED
+    page; each sequence's still-filling page arrives full-precision in the
+    per-step ``pages[...]["tail"]`` operand, (P + C) slots: slot i holds
+    position ``tail_start + i`` where ``tail_start = lengths // P * P``
+    (KIVI's streaming split — complete groups quantized once, the residual
+    recent window fp). This step's C new tokens are written into their tail
+    slots here (a functional scatter, NOT into the quantized pages — pack
+    stats come from complete pages only, host-side on fill) and come back
+    in ``(k_new, v_new)`` for the staging writeback. Query positions fold
+    into the batch axis as in ``attn_verify_paged``; row b*C + j sees
+    quantized positions [0, tail_start_b) plus tail tokens up to its own.
+
+    Returns (out (B, C, d), pages UNCHANGED, (k_new, v_new)) with
+    k_new/v_new (B, C, KV, D).
+    """
+    from repro.kernels.paged_attention import paged_attend_quant
+
+    B, C, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)
+    use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
+    if use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    dt = jnp.dtype(cfg.dtype)  # the cache's logical (at-rest) dtype
+    k_new = k.astype(dt)  # (B, C, KV, D)
+    v_new = v.astype(dt)
+    P = pages["k"]["codes"].shape[2]
+    lengths = lengths.astype(jnp.int32)
+    tail_start = lengths // P * P
+    # this chunk's tokens join the staged tail at their in-tail slots
+    bidx = jnp.arange(B)[:, None]
+    slots = (lengths - tail_start)[:, None] + jnp.arange(C, dtype=jnp.int32)
+    k_tail = pages["k"]["tail"].at[bidx, slots].set(k_new)
+    v_tail = pages["v"]["tail"].at[bidx, slots].set(v_new)
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    H = q.shape[2]
+    qf = q.reshape(B * C, 1, H, -1)  # b-major: row b*C + j is (seq b, query j)
+    out = paged_attend_quant(
+        qf, pages["k"], pages["v"],
+        jnp.repeat(k_tail, C, axis=0), jnp.repeat(v_tail, C, axis=0),
+        jnp.repeat(block_tables, C, axis=0), (pos + 1).reshape(B * C),
+        jnp.repeat(tail_start, C), scale=scale,
+        deq_dtype=cfg.dtype, impl=impl)
+    out = proj_out(p["wo"], out.reshape(B, C, H, -1))
+    return out, pages, (k_new, v_new)
+
+
 def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
                       impl: str = "auto"):
     """One-token decode directly against block-indexed page stores.
@@ -411,12 +469,20 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     masking takes the gathered path (masks are position-dense; a windowed
     paged read needs table slicing the kernel does not do yet).
 
+    Quantized stores (``quantized_pages``) route to ``_attn_chunk_quant``:
+    the pages stay read-only on device and the new K/V attends as an fp
+    tail, coming back in ``(k_new, v_new)`` for the host requantization.
+
     Returns (out, new_pages, (k_new, v_new)) — the per-token K/V is handed
     back so the host-authoritative store can apply the same O(token) write.
     """
     from repro.kernels.paged_attention import paged_attend
 
     B = x.shape[0]
+    if quantized_pages(pages):
+        out, pages, (k_new, v_new) = _attn_chunk_quant(
+            p, cfg, spec, x, pages, block_tables, lengths, impl=impl)
+        return out, pages, (k_new[:, 0], v_new[:, 0])
     q, k, v = _qkv(p, cfg, x)
     pos = lengths.astype(jnp.int32)
     use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
@@ -454,9 +520,14 @@ def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
 
     Returns (out (B, C, d), new_pages, (k_new, v_new)) with k_new/v_new
     (B, C, KV, D) — the written K/V, for the host-store writeback.
+    Quantized stores route to ``_attn_chunk_quant`` (fp tail, no device
+    page writes) — speculative verify composes with KIVI pages unchanged.
     """
     from repro.kernels.paged_attention import paged_attend
 
+    if quantized_pages(pages):
+        return _attn_chunk_quant(p, cfg, spec, x, pages, block_tables,
+                                 lengths, impl=impl)
     B, C, _ = x.shape
     q, k, v = _qkv(p, cfg, x)
     pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)

@@ -120,9 +120,15 @@ def test_preemption_recovery(dense_model, rng):
     assert total_preempt >= 1, "test should actually exercise preemption"
 
 
-def test_kv_quant_at_rest_still_decodes(dense_model, rng):
+def test_kv_quant_at_rest_still_decodes(dense_model):
     cfg, m, params = dense_model
-    prompts = _prompts(cfg, rng, n=2)
+    # own rng, not the session fixture: 8-bit-quant == fp greedy is a
+    # near-lossless EMPIRICAL property (the random smoke model has flat
+    # logits, so some draws sit on argmax margins and legitimately flip —
+    # both quantized backends still agree exactly on those, asserted in
+    # test_executor), so the draws must not shift with whatever tests ran
+    # earlier in the session
+    prompts = _prompts(cfg, np.random.default_rng(0), n=2)
     eng = LLMEngine(m, params, _engine_cfg(kv_quant=QuantConfig(bits=8)))
     for i, p in enumerate(prompts):
         eng.add_request(Request(request_id=f"r{i}", prompt=p,

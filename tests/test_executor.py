@@ -116,11 +116,25 @@ def test_paged_runner_recovers_after_failed_decode(olmo):
         assert eng.seqs[f"r{i}"].generated == ref.seqs[f"r{i}"].generated, i
 
 
-def test_kv_quant_disables_paged(olmo):
+def test_kv_quant_routing(olmo):
+    """KIVI-default quantization keeps the paged fast path (quantized page
+    stores, docs/kv_quant.md); quant configs the page layout cannot hold
+    (GEAR residual, non-KIVI axes) fall back to gathered."""
     from repro.core.kv_quant import QuantConfig
     cfg, m, params = olmo
     eng = LLMEngine(m, params, _cfg(kv_quant=QuantConfig(bits=8)))
-    assert eng.paged_runner is None
+    assert eng.paged_runner is not None
+    assert eng.store.quantized
+    for qc in (QuantConfig(bits=8, residual_rank=2),
+               QuantConfig(bits=8, key_axis="token"),
+               QuantConfig(bits=8, value_axis="channel")):
+        eng = LLMEngine(m, params, _cfg(kv_quant=qc))
+        assert eng.paged_runner is None and not eng.store.quantized
+    # demanding the paged backend with an unholdable quant config must fail
+    with pytest.raises(ValueError):
+        LLMEngine(m, params, _cfg(backend="paged",
+                                  kv_quant=QuantConfig(bits=8,
+                                                       residual_rank=2)))
 
 
 # ---------------------------------------------------------------------------
@@ -293,3 +307,138 @@ def test_host_copy_counter_tracks_gathered_traffic(olmo):
     eng = _drive(m, params, _cfg(backend="gathered"), prompts, max_new=4)
     assert eng.host_copy_bytes > 0
     assert eng.paged_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# quantized paged decode (KIVI pages in the hot path, docs/kv_quant.md)
+# ---------------------------------------------------------------------------
+
+def _quant_cfg(bits=8, **kw):
+    from repro.core.kv_quant import QuantConfig
+    return _cfg(kv_quant=QuantConfig(bits=bits), **kw)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quant_paged_matches_gathered_quant(olmo, bits):
+    """Both backends read and write the SAME quantized page bytes (state.py
+    is the single quantization site), so greedy tokens must match token-for-
+    token — at 4 bits too, where quantization error is large but common."""
+    cfg, m, params = olmo
+    prompts = _prompts(rng=np.random.default_rng(31), cfg=cfg)
+    g = _drive(m, params, _quant_cfg(bits=bits, backend="gathered"), prompts,
+               max_new=6)
+    p = _drive(m, params, _quant_cfg(bits=bits, backend="auto"), prompts,
+               max_new=6)
+    assert p.paged_steps > 0
+    for i in range(len(prompts)):
+        assert g.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
+
+
+def test_quant_paged_near_fp_at_8bit(olmo):
+    """8-bit KIVI is near-lossless: most sequences emit the same greedy
+    tokens as the fp paged engine. Exact all-sequence equality is an
+    empirical property of the draw (the random smoke model has flat logits,
+    so some prompts sit on argmax margins) — what must ALWAYS hold is that
+    any divergence is a pure quantization effect, i.e. the gathered+kv_quant
+    reference diverges identically (it reads the same bytes)."""
+    cfg, m, params = olmo
+    prompts = _prompts(rng=np.random.default_rng(33), cfg=cfg)
+    fp = _drive(m, params, _cfg(backend="auto"), prompts, max_new=6)
+    q = _drive(m, params, _quant_cfg(backend="auto"), prompts, max_new=6)
+    g = _drive(m, params, _quant_cfg(backend="gathered"), prompts, max_new=6)
+    matches = sum(fp.seqs[f"r{i}"].generated == q.seqs[f"r{i}"].generated
+                  for i in range(len(prompts)))
+    assert matches * 2 >= len(prompts), f"{matches}/{len(prompts)}"
+    for i in range(len(prompts)):
+        assert q.seqs[f"r{i}"].generated == g.seqs[f"r{i}"].generated, i
+
+
+def test_quant_paged_cow_preemption_coherency(olmo):
+    """CoW must copy codes AND scale/zero planes; preemption-recompute must
+    requantize pages identically on both backends."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(3)
+    prefix = list(map(int, r.integers(2, cfg.vocab_size, size=24)))
+    prompts = [prefix + list(map(int, r.integers(2, cfg.vocab_size, size=k)))
+               for k in (5, 9, 7, 11)]
+    # tight pool: preemptions + recompute under quantized stores
+    g = _drive(m, params, _quant_cfg(backend="gathered", num_blocks=14,
+                                     enable_prefix_cache=False),
+               prompts, max_new=6)
+    p = _drive(m, params, _quant_cfg(backend="auto", num_blocks=14,
+                                     enable_prefix_cache=False),
+               prompts, max_new=6)
+    for i in range(len(prompts)):
+        assert g.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
+    # prefix cache: shared quantized blocks -> CoW when decode writes tails
+    engines = {}
+    for backend in ("gathered", "auto"):
+        eng = LLMEngine(m, params, _quant_cfg(backend=backend))
+        eng.add_request(Request(request_id="r0", prompt=prompts[0],
+                                sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        for i, p2 in enumerate(prompts[1:], start=1):
+            eng.add_request(Request(request_id=f"r{i}", prompt=p2,
+                                    sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        engines[backend] = eng
+    assert engines["auto"].seqs["r1"].prefix_hit_tokens >= 16
+    for i in range(len(prompts)):
+        assert engines["gathered"].seqs[f"r{i}"].generated == \
+            engines["auto"].seqs[f"r{i}"].generated, i
+
+
+def test_quant_paged_kernel_interpret_path(olmo):
+    """Drive the quantized Pallas kernel (interpret mode) through the engine
+    — the TPU code path for quantized pages, not just the jnp reference."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(5)
+    prompts = [list(map(int, r.integers(2, cfg.vocab_size, size=12)))
+               for _ in range(2)]
+    ref = _drive(m, params, _quant_cfg(backend="auto"), prompts, max_new=3)
+    itp = _drive(m, params, _quant_cfg(backend="auto",
+                                       paged_impl="interpret"),
+                 prompts, max_new=3)
+    assert itp.paged_steps > 0
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == itp.seqs[f"r{i}"].generated, i
+
+
+def test_quant_cross_backend_determinism(olmo):
+    """gathered == paged == speculative greedy token streams under kv_quant:
+    speculative verify reads the same quantized pages and its commit-time
+    writeback requantizes them token-at-a-time exactly like plain paged."""
+    cfg, m, params = olmo
+    prompts = _prompts(rng=np.random.default_rng(37), cfg=cfg)
+
+    def run(backend):
+        eng = _drive(m, params, _quant_cfg(backend=backend), prompts,
+                     max_new=6)
+        return {f"r{i}": eng.seqs[f"r{i}"].generated
+                for i in range(len(prompts))}
+
+    streams = {b: run(b) for b in ("gathered", "paged", "speculative")}
+    assert streams["gathered"] == streams["paged"] == streams["speculative"]
+
+
+def test_quant_store_capacity_and_migration(olmo):
+    """Quantized stores really shrink (codes+planes < fp16 pages) and a
+    block payload round-trips through export/import (migration path)."""
+    cfg, m, params = olmo
+    eng = _drive(m, params, _quant_cfg(backend="auto", block_size=32,
+                                       max_model_len=128),
+                 _prompts(rng=np.random.default_rng(41), cfg=cfg), max_new=4)
+    store = eng.store
+    assert store.quantized
+    assert store.kv_bytes_per_block() < store.kv_fp16_bytes_per_block()
+    ratio = store.kv_fp16_bytes_per_block() / store.kv_bytes_per_block()
+    assert ratio >= 1.8, ratio  # the §III.C capacity claim at 8-bit, bs=32
+    payload = store.block_payload(1)
+    store.restore_block(2, payload)
+    after = store.block_payload(2)
+    for b, a in zip(payload, after):
+        if isinstance(b, bool):  # trailing block_quantized flag
+            assert b == a
+        else:  # (codes, scale, zero, staging) per quantized leaf
+            for x, y in zip(b, a):
+                np.testing.assert_array_equal(x, y)

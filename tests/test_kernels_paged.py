@@ -1,11 +1,20 @@
 """Paged attention Pallas kernel (interpret mode) vs pure-jnp oracle — shape
-and dtype sweeps per the kernel deliverable."""
+and dtype sweeps per the kernel deliverable; plus the quantized-page variant
+(KIVI codes + scale/zero planes + fp tail, docs/kv_quant.md) against both
+its own oracle and the core/kv_quant.py jnp reference math."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
-from repro.kernels.paged_attention import paged_attend, paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.core import kv_quant as core_kv_quant
+from repro.kernels.kv_quant import quantize_kv_pages
+from repro.kernels.paged_attention import (paged_attend,
+                                           paged_decode_attention,
+                                           paged_decode_attention_quant)
+from repro.kernels.paged_attention.paged_attention import paged_attention_quant
+from repro.kernels.paged_attention.ref import (paged_attention_quant_ref,
+                                               paged_attention_ref)
 
 CASES = [
     # B, KV, G, D, P, NB, NP
@@ -76,6 +85,124 @@ def test_model_layout_adapter_matches_decode_attention(rng):
     ref = decode_attention(q, jnp.swapaxes(k_cat, 1, 2), jnp.swapaxes(v_cat, 1, 2),
                            lengths, scale=0.2)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized pages
+# ---------------------------------------------------------------------------
+
+def _quant_pages(rng, KV, NB, P, D, bits):
+    """Random fp pages -> (codes, scale, zero) per KIVI grouping, kernel
+    layout, plus the dequantized fp equivalent for oracle comparison."""
+    kf = rng.normal(size=(KV * NB, P, D)).astype(np.float32) * 2
+    vf = rng.normal(size=(KV * NB, P, D)).astype(np.float32) * 2
+    kc, ks, kz = quantize_kv_pages(jnp.asarray(kf), bits=bits, axis="channel",
+                                   impl="ref")
+    vc, vs, vz = quantize_kv_pages(jnp.asarray(vf), bits=bits, axis="token",
+                                   impl="ref")
+    k = {"codes": kc.reshape(KV, NB, P, D),
+         "scale": ks.reshape(KV, NB, 1, D), "zero": kz.reshape(KV, NB, 1, D)}
+    v = {"codes": vc.reshape(KV, NB, P, D),
+         "scale": vs.reshape(KV, NB, P, 1), "zero": vz.reshape(KV, NB, P, 1)}
+    kd = jnp.reshape(kc.astype(jnp.float32) * ks + kz, (KV, NB, P, D))
+    vd = jnp.reshape(vc.astype(jnp.float32) * vs + vz, (KV, NB, P, D))
+    return k, v, kd, vd
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("T", [1, 3])
+def test_quant_kernel_matches_quant_ref(bits, T, rng):
+    """Pallas quantized kernel (interpret) == jnp quantized oracle."""
+    B, KV, G, D, P, NB, NP = 2, 2, 4, 64, 16, 16, 4
+    k, v, _, _ = _quant_pages(rng, KV, NB, P, D, bits)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, D)), jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    tables = jnp.asarray(np.stack([rng.choice(NB, NP, replace=False)
+                                   for _ in range(B)]), jnp.int32)
+    ts = jnp.asarray(rng.integers(1, NP * P, size=(B,)), jnp.int32)
+    lengths = ts + jnp.asarray(rng.integers(1, T + 1, size=(B,)), jnp.int32)
+    args = (q, k["codes"], k["scale"], k["zero"], v["codes"], v["scale"],
+            v["zero"], kt, vt, tables, lengths, ts)
+    ref = paged_attention_quant_ref(*args, scale=0.125,
+                                    deq_dtype=jnp.bfloat16)
+    out = paged_attention_quant(*args, scale=0.125, deq_dtype=jnp.bfloat16,
+                                interpret=True)
+    # bf16 dequant values accumulate in different orders (grid pages vs one
+    # jnp reduction) — tolerance covers association noise, not quant error
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([4, 8]), st.integers(1, 1000))
+def test_quant_oracle_matches_core_reference(bits, seed):
+    """Quantized paged attention == fp paged attention over pages
+    dequantized with the core/kv_quant.py jnp reference (both groupings:
+    K per-channel, V per-token), with the tail materialized into pages —
+    the end-to-end statement that the kernel's dequant math IS the
+    reference quantization math."""
+    rng = np.random.default_rng(seed)
+    B, KV, G, D, P, NB, NP, T = 1, 2, 2, 32, 8, 8, 4, 2
+    kf = rng.normal(size=(KV * NB, P, D)).astype(np.float32)
+    vf = rng.normal(size=(KV * NB, P, D)).astype(np.float32)
+    # core jnp reference: per-page groups == core.quantize applied to each
+    # (P, D) page independently with the KIVI axis choice
+    import jax
+
+    def per_page(axis):
+        return jax.vmap(lambda x: core_kv_quant.quantize(
+            x, bits, axis, token_axis=0, channel_axis=1))
+
+    kc, ks, kz = per_page("channel")(jnp.asarray(kf))
+    vc, vs, vz = per_page("token")(jnp.asarray(vf))
+    k = {"codes": kc.reshape(KV, NB, P, D),
+         "scale": ks.reshape(KV, NB, 1, D), "zero": kz.reshape(KV, NB, 1, D)}
+    v = {"codes": vc.reshape(KV, NB, P, D),
+         "scale": vs.reshape(KV, NB, P, 1), "zero": vz.reshape(KV, NB, P, 1)}
+    q = jnp.asarray(rng.normal(size=(B, KV, G, D)), jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    tables = np.stack([rng.choice(NB, NP, replace=False) for _ in range(B)])
+    ts = np.asarray(rng.integers(1, NP * P, size=(B,)))
+    lengths = ts + np.asarray(rng.integers(1, T + 1, size=(B,)))
+    out = paged_decode_attention_quant(
+        q, k, v, kt, vt, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(lengths, jnp.int32), jnp.asarray(ts, jnp.int32),
+        scale=0.2, deq_dtype="float32", impl="ref")
+    # materialize: dequantize via the core reference, write the tail in
+    kd = np.asarray(core_kv_quant.dequantize(kc, ks, kz)).reshape(KV, NB, P, D)
+    vd = np.asarray(core_kv_quant.dequantize(vc, vs, vz)).reshape(KV, NB, P, D)
+    for b in range(B):
+        for i in range(int(lengths[b] - ts[b])):
+            pos = int(ts[b] + i)
+            kd[:, tables[b, pos // P], pos % P] = np.asarray(kt)[b, i]
+            vd[:, tables[b, pos // P], pos % P] = np.asarray(vt)[b, i]
+    ref = paged_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                              jnp.asarray(tables, jnp.int32),
+                              jnp.asarray(lengths, jnp.int32), scale=0.2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_quant_tail_garbage_beyond_length_ignored(rng):
+    """Neither page slots past tail_start nor tail slots past length may
+    influence the output (the paging invariant, quantized edition)."""
+    B, KV, G, D, P, NB, NP, T = 1, 2, 2, 32, 8, 8, 4, 4
+    k, v, _, _ = _quant_pages(rng, KV, NB, P, D, 8)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, D)), jnp.float32)
+    kt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(B, T, KV, D)), jnp.float32)
+    tables = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    ts = jnp.asarray([13], jnp.int32)
+    lengths = jnp.asarray([15], jnp.int32)  # 2 of 4 tail tokens valid
+    out1 = paged_decode_attention_quant(q, k, v, kt, vt, tables, lengths, ts,
+                                        scale=0.2, impl="ref")
+    k2 = dict(k, codes=k["codes"].at[:, 2:].set(255))  # poison dead pages
+    v2 = dict(v, codes=v["codes"].at[:, 2:].set(255))
+    kt2 = kt.at[:, 2:].set(1e6)  # poison dead tail slots
+    vt2 = vt.at[:, 2:].set(-1e6)
+    out2 = paged_decode_attention_quant(q, k2, v2, kt2, vt2, tables, lengths,
+                                        ts, scale=0.2, impl="ref")
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
 def test_ref_impl_dispatch(rng):

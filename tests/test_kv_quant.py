@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.kv_quant import QuantConfig, dequantize, quant_error, quantize, \
-    quantize_kv, dequantize_kv
+from repro.core.kv_quant import QuantConfig, compression_ratio, dequantize, \
+    quant_error, quantize, quantize_kv, dequantize_kv
 from repro.kernels.kv_quant import dequantize_kv_pages, quantize_kv_pages
 from repro.kernels.kv_quant.ref import quantize_pages_ref
 
@@ -57,6 +57,23 @@ def test_gear_residual_improves(rng):
     kq1, vq1, res = quantize_kv(k, v, QuantConfig(bits=2, residual_rank=4))
     k1, _ = dequantize_kv(kq1, vq1, res)
     assert float(jnp.abs(k1 - k).mean()) < float(jnp.abs(k0 - k).mean())
+
+
+def test_compression_ratio_counts_groups_per_axis():
+    """scale/zero storage is one pair per GROUP: ``channels`` groups for
+    per-channel quantization, ``tokens`` for per-token — not
+    ``max(tokens, channels)`` regardless of axis (the old over-count)."""
+    tokens, channels, bits = 256, 8, 8
+    rk = compression_ratio(bits, 0, tokens, channels, axis="channel")
+    rt = compression_ratio(bits, 0, tokens, channels, axis="token")
+    assert rk == pytest.approx(
+        tokens * channels * 16 / (tokens * channels * bits + 2 * 16 * channels))
+    assert rt == pytest.approx(
+        tokens * channels * 16 / (tokens * channels * bits + 2 * 16 * tokens))
+    # a tall-skinny cache: per-channel grouping stores 32x fewer pairs
+    assert rk > rt
+    # residual accounting unchanged
+    assert compression_ratio(bits, 4, tokens, channels) < rk
 
 
 @pytest.mark.parametrize("axis", ["channel", "token"])

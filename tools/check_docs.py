@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Documentation link checker (run by the CI docs job).
+
+Three guarantees:
+  1. every ``docs/*.md`` page is reachable from ``README.md`` by following
+     markdown links — no orphaned documentation;
+  2. every relative markdown link (``[x](path)``, optionally ``#anchored``)
+     resolves to an existing file;
+  3. every backticked code-path reference in a doc (`foo/bar.py`,
+     `tests/test_x.py`, `docs/y.md`) resolves somewhere sensible in the
+     repo — doc rot from renames fails CI instead of lingering.
+
+Exit code 0 = clean; 1 = problems (each printed as ``file: message``).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.py` or `docs/page.md` inside backticks; a trailing
+# ::symbol / #anchor is tolerated and stripped
+CODE_REF = re.compile(r"`([\w./-]+\.(?:py|md|ya?ml|toml|txt))(?:::[\w.]+)?`")
+
+# roots a bare code reference may be relative to (doc prose often writes
+# `core/engine.py` for src/repro/core/engine.py)
+SEARCH_ROOTS = ["", "src/repro", "src", "docs"]
+
+
+def md_files():
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def resolve_link(doc: pathlib.Path, target: str):
+    """Relative markdown link -> existing path (or None)."""
+    target = target.split("#", 1)[0]
+    if not target:
+        return doc  # pure in-page anchor
+    cand = (doc.parent / target).resolve()
+    return cand if cand.exists() else None
+
+
+def resolve_code_ref(ref: str):
+    for base in SEARCH_ROOTS:
+        if (ROOT / base / ref).exists():
+            return True
+    return False
+
+
+def main() -> int:
+    problems = []
+    links = {}  # doc -> set of md files it links to
+    for doc in md_files():
+        if not doc.exists():
+            problems.append(f"{doc.relative_to(ROOT)}: missing")
+            continue
+        text = doc.read_text()
+        linked = set()
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            resolved = resolve_link(doc, target)
+            if resolved is None:
+                problems.append(
+                    f"{doc.relative_to(ROOT)}: broken link -> {target}")
+            elif resolved.suffix == ".md":
+                linked.add(resolved)
+        links[doc.resolve()] = linked
+        for m in CODE_REF.finditer(text):
+            if not resolve_code_ref(m.group(1)):
+                problems.append(
+                    f"{doc.relative_to(ROOT)}: dangling code reference "
+                    f"`{m.group(1)}`")
+
+    # reachability from README over the md link graph
+    seen = set()
+    frontier = [(ROOT / "README.md").resolve()]
+    while frontier:
+        page = frontier.pop()
+        if page in seen:
+            continue
+        seen.add(page)
+        frontier.extend(links.get(page, ()))
+    for doc in (ROOT / "docs").glob("*.md"):
+        if doc.resolve() not in seen:
+            problems.append(
+                f"{doc.relative_to(ROOT)}: not reachable from README.md")
+
+    for p in problems:
+        print(p)
+    print(f"checked {len(links)} docs: "
+          f"{'FAIL' if problems else 'ok'} ({len(problems)} problems)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
