@@ -10,17 +10,20 @@ consumes), and a ``ModelRunner`` backend executes each scheduled batch:
 
   * ``GatheredRunner`` — stages a dense (B, W) cache window, runs the jitted
     ``model.extend`` (decodes are chunks of length 1 — SplitFuse unified
-    batching), scatters written positions back. Prefill always runs here, as
-    do state-mixer models (Mamba/xLSTM/whisper cross-KV), MLA, and windowed /
-    chunked attention.
-  * ``PagedRunner`` — decode chunks of pure global-attention models run
-    ``model.decode_paged`` directly against the page stores through block
-    tables (the Pallas ``paged_attention`` op; interpret/ref on CPU): no
-    (B, W) gather, no full-window scatter, only the new token's K/V is
-    written. ``store.host_copy_bytes`` stays flat on these steps. With
-    ``kv_quant`` the page stores hold KIVI uint8 codes + scale/zero planes
-    and the quantized paged-attention kernel dequantizes in-VMEM — the same
-    HBM holds ~2x the resident sequences at 8-bit (docs/kv_quant.md).
+    batching), scatters written positions back. The correctness reference;
+    state-mixer models (Mamba/xLSTM/whisper cross-KV), MLA, windowed /
+    chunked attention and modality-extras batches run here.
+  * ``PagedRunner`` — pure global-attention models run every step directly
+    against the page stores through block tables (the Pallas
+    ``paged_attention`` op; interpret/ref on CPU): decode chunks via
+    ``model.decode_paged``, prompt chunks — and mixed SplitFuse steps
+    fusing decodes with in-flight prefills into ONE ragged batch — via
+    ``model.extend_paged``. No (B, W) gather, no full-window scatter, only
+    each chunk's own K/V is written; ``store.host_copy_bytes`` stays flat
+    through prefill AND decode. With ``kv_quant`` the page stores hold
+    KIVI uint8 codes + scale/zero planes and the quantized paged-attention
+    kernel dequantizes in-VMEM — the same HBM holds ~2x the resident
+    sequences at 8-bit (docs/kv_quant.md).
 
   * ``SpeculativeRunner`` — draft–verify decode (survey §II.B): a draft
     model proposes k tokens, the target scores all k+1 positions in one
@@ -48,7 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.block_manager import BlockManager, OutOfBlocks
-from repro.core.executor import make_runners, marshal_batch
+from repro.core.executor import (chunk_carries_extras, make_runners,
+                                 marshal_batch)
 from repro.core.executor.base import ModelRunner
 from repro.core.executor.speculative import SpeculativeRunner
 from repro.core.executor.state import PagedModelState  # noqa: F401 (re-export)
@@ -126,6 +130,11 @@ class LLMEngine:
         self.store = PagedModelState(model, self.cfg)
         self.runner, self.paged_runner = make_runners(model, params, self.cfg,
                                                       self.store)
+        if self.paged_runner is not None:
+            # sacrificial page: ragged-chunk padding writes (paged prefill)
+            # and speculative batch-padding rows land here — reserved up
+            # front so it can never be a member of a real block table
+            self.paged_runner.scratch_block = self.bm.allocate(1)[0]
         # speculative decoding layers on top of the paged backend; "auto"
         # opts in when a SpeculativeConfig is present, "speculative" demands it
         self.spec_runner: Optional[SpeculativeRunner] = None
@@ -142,11 +151,11 @@ class LLMEngine:
                 draft_params = self.spec_cfg.draft_params
             else:
                 draft_model, draft_params = model, params
-            # sacrificial page for batch-padding rows (never in a real table)
-            scratch = self.bm.allocate(1)[0]
+            # batch-padding rows share the paged runner's sacrificial page
             self.spec_runner = SpeculativeRunner(
                 self.paged_runner, draft_model, draft_params,
-                self.spec_cfg.num_draft_tokens, scratch_block=scratch)
+                self.spec_cfg.num_draft_tokens,
+                scratch_block=self.paged_runner.scratch_block)
             self._spec_active = True
             self.scheduler.cfg = dataclasses.replace(
                 self.scheduler.cfg,
@@ -483,25 +492,46 @@ class LLMEngine:
         self._step_inflight = {c.seq.request_id for c in plan.chunks}
         try:
             if self._spec_active and plan.decode:
-                # speculative decode: draft k + verify k+1 per sequence
+                # speculative decode: draft k + verify k+1 per sequence;
+                # prompt chunks still run paged (extend_paged) below
                 self._run_spec_group(plan.decode, plan.spec_tokens)
-                rest = plan.prefill
-            elif self.paged_runner is not None and plan.decode:
-                # decode-path specialization: decodes run on the paged
-                # backend, prompt chunks (if any) on the gathered reference
-                self._run_group(plan.decode, self.paged_runner)
                 rest = plan.prefill
             else:
                 rest = plan.chunks  # SplitFuse unified batch
             if rest:
+                # chunks carrying modality extras run gathered AS THEIR OWN
+                # GROUP on every routing path — fused with non-extras
+                # chunks, marshal_batch drops the extras ("mixed first/
+                # non-first") and the model silently skips the splice (the
+                # shared predicate in executor/base.py explains the mode)
+                flags = [chunk_carries_extras(c) for c in rest]
+                ext = [c for c, f in zip(rest, flags) if f]
+                rest = [c for c, f in zip(rest, flags) if not f]
                 if self.exact_chunks:
-                    by_len: Dict[int, List[ChunkWork]] = {}
-                    for c in rest:
-                        by_len.setdefault(c.length, []).append(c)
-                    for _, group in sorted(by_len.items()):
-                        self._run_group(group, self.runner)
+                    # exact-chunk scheduling (state mixers; opt-in
+                    # elsewhere): group by length so recurrent chunks stay
+                    # exact, pow2 jit variants — extras and non-extras
+                    # grouped separately. Non-extras groups still prefer
+                    # the paged backend when one exists (exact_chunks
+                    # constrains chunk LENGTHS, not the execution path)
+                    for part, runner in ((ext, self.runner),
+                                         (rest, self.paged_runner
+                                          or self.runner)):
+                        by_len: Dict[int, List[ChunkWork]] = {}
+                        for c in part:
+                            by_len.setdefault(c.length, []).append(c)
+                        for _, group in sorted(by_len.items()):
+                            self._run_group(group, runner)
                 else:
-                    self._run_group(rest, self.runner)
+                    if ext:
+                        self._run_group(ext, self.runner)
+                    # the rest of the ragged plan — decodes AND prompt
+                    # chunks — fuses into ONE dispatch: paged when the
+                    # backend exists (decode_paged when all lengths are 1,
+                    # extend_paged otherwise), gathered otherwise
+                    if rest:
+                        self._run_group(rest,
+                                        self.paged_runner or self.runner)
         finally:
             self._step_inflight = None
         return plan.num_tokens

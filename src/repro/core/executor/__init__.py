@@ -2,16 +2,23 @@
 
 ``make_runners`` wires the backends for a model/config pair:
   * GatheredRunner always exists — the correctness reference, and the only
-    path for prefill and for model families the paged path doesn't cover.
+    path for model families the paged path doesn't cover (state mixers,
+    MLA, windowed/chunked attention, enc-dec) and for batches carrying
+    modality extras (vision embeds, audio frames).
   * PagedRunner exists when the stack is pure global attention
     (``paged_decode_supported``) and the ``execution_backend`` config allows
-    it. ``kv_quant`` no longer disqualifies it: KIVI-quantized caches are a
+    it. It is self-sufficient end-to-end: decode runs ``model.decode_paged``
+    and prompt chunks — including mixed SplitFuse steps — run
+    ``model.extend_paged``, both directly on the block-indexed page stores;
+    a paged-capable stack needs NO gathered fallback for prefill.
+    ``kv_quant`` doesn't disqualify it either: KIVI-quantized caches are a
     native storage format of the paged path (uint8 code pages + scale/zero
     planes, dequantized in-VMEM by the quantized paged-attention kernel —
     docs/kv_quant.md). Only quant configs the page layout cannot hold
     (GEAR residuals, non-KIVI grouping axes) fall back to gathered.
 """
-from repro.core.executor.base import ExecBatch, ModelRunner, marshal_batch  # noqa: F401
+from repro.core.executor.base import (ExecBatch, ModelRunner,  # noqa: F401
+                                      chunk_carries_extras, marshal_batch)
 from repro.core.executor.gathered import GatheredRunner  # noqa: F401
 from repro.core.executor.paged import PagedRunner  # noqa: F401
 from repro.core.executor.speculative import SpeculativeRunner  # noqa: F401

@@ -9,11 +9,14 @@ likes (vLLM/SGLang-style engine/runner layering).
 Backends:
   * GatheredRunner — stage a dense (B, W) cache window per step, run
     ``model.extend``, scatter written positions back. Handles every model
-    family (prefill, chunked prefill, state mixers, MLA, enc-dec).
-  * PagedRunner — decode-only specialization: block tables + lengths go
-    straight into ``model.decode_paged`` which runs the Pallas
-    paged-attention op against device-resident page stores; only the new
-    token's K/V is written. No (B, W) gather, no full-window scatter.
+    family (state mixers, MLA, enc-dec, modality extras); the correctness
+    reference for the paged path.
+  * PagedRunner — block tables + lengths go straight into
+    ``model.decode_paged`` (pure decode) or ``model.extend_paged`` (prompt
+    chunks / mixed SplitFuse steps, one fused ragged batch) running the
+    Pallas paged-attention op against device-resident page stores; only
+    the chunk's own K/V is written. No (B, W) gather, no full-window
+    scatter — for prefill either.
 """
 from __future__ import annotations
 
@@ -40,6 +43,18 @@ class ExecBatch:
     extras: Optional[dict] = None
 
 
+def chunk_carries_extras(ch: ChunkWork) -> bool:
+    """Whether this chunk must deliver modality extras (vision embeds,
+    audio frames) to the model: the first prompt chunk of a request
+    carrying extras. The ONE definition of the condition — it decides both
+    what ``marshal_batch`` attaches AND which chunks the engine must route
+    to the gathered runner as their own group (an extras chunk fused with
+    others would get its extras dropped below and then sail through the
+    paged ``supports`` check, silently skipping the splice)."""
+    ext = getattr(ch.seq.request, "extras", None)
+    return bool(ext) and ch.seq.num_computed == 0 and ch.start == 0
+
+
 def marshal_batch(chunks: List[ChunkWork], block_size: int,
                   max_model_len: int) -> ExecBatch:
     """Pack scheduled chunks into dense host arrays (the jit boundary)."""
@@ -59,9 +74,8 @@ def marshal_batch(chunks: List[ChunkWork], block_size: int,
         tb = seq.block_table[:nmax]
         tables[b, : len(tb)] = tb
         slots[b] = seq.state_slot if seq.state_slot is not None else 0
-        ext = getattr(seq.request, "extras", None)
-        if ext and seq.num_computed == 0 and ch.start == 0:
-            for k, v in ext.items():
+        if chunk_carries_extras(ch):
+            for k, v in seq.request.extras.items():
                 extras.setdefault(k, []).append(v)
     batch_extras = None
     if extras:

@@ -3,9 +3,11 @@
 Each step gathers the scheduled sequences' pages into a dense (B, W) cache
 window (numpy memcpy on CPU), runs the jitted ``model.extend`` (decodes are
 chunks of length 1 — SplitFuse unified batching), then scatters the newly
-written positions back to their pages. This is the correctness reference and
-the only path for prefill and state-mixer models (Mamba/xLSTM/whisper) and
-MLA; all window-staging traffic it generates is charged to
+written positions back to their pages. This is the correctness reference
+(prefill included — the paged backend's ``extend_paged`` path is asserted
+token-for-token against it) and the only path for state-mixer models
+(Mamba/xLSTM/whisper), MLA, windowed/chunked attention, and batches with
+modality extras; all window-staging traffic it generates is charged to
 ``PagedModelState.host_copy_bytes``. KV-quantized stores are transparent
 here: ``gather`` stages dequantized windows and ``scatter`` requantizes the
 written pages (state.py), so this stays the parity reference for the

@@ -1,4 +1,5 @@
-"""PagedRunner: decode straight on block-indexed page stores (no gather).
+"""PagedRunner: decode AND chunked prefill straight on block-indexed page
+stores (no gather).
 
 The hot path the survey's §III.A/§IV.A machinery exists for: a pure-decode
 step passes block tables + lengths into ``model.decode_paged``, which runs
@@ -9,8 +10,20 @@ traffic is the O(tokens) new-KV writeback that keeps the host-authoritative
 ``PagedModelState`` coherent for CoW / prefix-cache payloads / migration
 (on a TPU-real backend that writeback disappears with the host store).
 
-Mirror coherency: any engine-side page mutation (prefill scatter, CoW copy,
-host-tier restore) bumps ``store.version`` and records dirty block ids; the
+Steps carrying prompt chunks — including mixed SplitFuse steps that fuse
+decodes with in-flight prefills — run ``model.extend_paged`` instead: the
+whole ragged plan marshals into ONE (B, C) batch (C = longest chunk, pow2-
+padded to bound the jit cache), each row's chunk K/V is written into its
+page slots in place (multi-token writes span page boundaries), and padded
+positions redirect their writes to the engine-reserved ``scratch_block``.
+Prefill therefore pays the same zero-gather economics as decode; the cost
+of single-dispatch fusion is that short rows compute C query positions
+(the batch-axis fold the speculative verify already uses) — ragged-aware
+kernels can reclaim that later without touching this marshaling contract.
+
+Mirror coherency: any engine-side page mutation (gathered-fallback scatter,
+CoW copy, host-tier restore) bumps ``store.version`` and records dirty
+block ids; the
 next paged step re-uploads just those blocks (full re-upload when most of
 the pool is dirty). In steady decode-only phases nothing is uploaded at all.
 
@@ -34,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor.base import ExecBatch, ModelRunner
-from repro.core.executor.state import PagedModelState, pad_pow2
+from repro.core.executor.state import PagedModelState, next_pow2, pad_pow2
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -62,6 +75,13 @@ class PagedRunner(ModelRunner):
         self._decode_jit = jax.jit(model.decode_paged,
                                    static_argnames=("impl",),
                                    donate_argnums=(2,))
+        self._extend_jit = jax.jit(model.extend_paged,
+                                   static_argnames=("impl",),
+                                   donate_argnums=(2,))
+        # sacrificial page for ragged-chunk padding writes; the ENGINE
+        # reserves it (block manager ownership) right after construction —
+        # it is never a member of any real block table
+        self.scratch_block: Optional[int] = None
         self._pages: Optional[Tuple[Dict[str, Any], ...]] = None
         self._synced_version = -1
         # telemetry: what replaced host_copy_bytes on this path
@@ -185,13 +205,20 @@ class PagedRunner(ModelRunner):
 
     # ------------------------------------------------------------------
     def supports(self, batch: ExecBatch) -> bool:
-        return (batch.extras is None
-                and all(c.length == 1 for c in batch.chunks))
+        # extras (vision embeds, audio frames) only exist on the gathered
+        # extend path; everything else — pure decode, prompt chunks, mixed
+        # SplitFuse steps — runs here
+        return batch.extras is None
 
     def execute(self, batch: ExecBatch) -> np.ndarray:
         assert self.supports(batch)
         self.sync()
-        lengths = batch.cache_lens  # decode: start == tokens already cached
+        lengths = batch.cache_lens  # chunk start == tokens already cached
+        if all(c.length == 1 for c in batch.chunks):
+            return self._execute_decode(batch, lengths)
+        return self._execute_extend(batch, lengths)
+
+    def _execute_decode(self, batch: ExecBatch, lengths: np.ndarray) -> np.ndarray:
         try:
             logits, new_pages, writes = self._decode_jit(
                 self.params, jnp.asarray(batch.tokens),
@@ -213,26 +240,105 @@ class PagedRunner(ModelRunner):
         self.steps += 1
         return np.asarray(logits.astype(jnp.float32))
 
-    def writeback_tokens(self, tables: np.ndarray, lengths: np.ndarray,
-                         C: int, writes, B: int) -> int:
-        """O(B*C) host-store writeback of the per-token K/V returned by
-        ``decode_paged`` (C == 1, leaves (B, KV, D)) or ``verify_paged``
-        (leaves (B, C, KV, D)) — shared by the paged and speculative
-        backends so the host-coherency contract lives in ONE place. Rows
-        past ``B`` (speculative batch padding) are dropped: their writes
-        only exist in the scratch page. Returns bytes written."""
+    def _execute_extend(self, batch: ExecBatch, lengths: np.ndarray) -> np.ndarray:
+        """Chunked prefill / mixed SplitFuse step on the page stores.
+
+        The ragged plan runs as ONE ``model.extend_paged`` dispatch: both
+        batch axes pad to pow2 (bounding the jit cache exactly like the
+        pow2 padding in mirror sync / spec batches — draining batches must
+        not recompile the unrolled-layer graph per B), ``chunk_lens`` tells
+        the model each row's real length, and padded positions/rows write
+        into the engine-reserved scratch page. No (B, W) gather, no
+        scatter — ``host_copy_bytes`` stays flat through prefill too."""
+        assert self.scratch_block is not None, \
+            "engine must reserve a scratch block before paged prefill"
+        B, Cmax = batch.tokens.shape
+        C = next_pow2(Cmax)
+        tokens = np.zeros((B, C), batch.tokens.dtype)
+        tokens[:, :Cmax] = batch.tokens
+        chunk_lens = np.asarray([c.length for c in batch.chunks], np.int32)
+        # trim the marshalled table width to the batch's live maximum
+        # (pow2-bucketed: bounded jit variants). The attention only ever
+        # reads pages below lengths + chunk, and the jnp chunked oracle
+        # gathers the FULL table width per sequence — against a
+        # max_model_len-wide table that costs O(W) regardless of how short
+        # the sequences are, exactly the dead work the gathered path's
+        # masked-tile skipping avoids. Early prefill steps run at the
+        # width they need, not the width the engine might someday need.
         bs = self.cfg.block_size
-        pos = lengths[:B, None].astype(np.int64) + np.arange(C)
-        blk = np.take_along_axis(tables[:B].astype(np.int64), pos // bs,
-                                 axis=1).reshape(-1)
-        off = (pos % bs).reshape(-1)
+        nb = next_pow2(-(-int(np.max(lengths + chunk_lens)) // bs))
+        tables = batch.tables[:, : min(nb, batch.tables.shape[1])]
+        # pow2 batch rows: padding rows aim every table entry at the
+        # scratch page and declare chunk_len 0, so ALL their writes
+        # redirect there and their logits are sliced off below
+        Bp = next_pow2(B)
+        if Bp > B:
+            pad = Bp - B
+            tokens = np.concatenate([tokens, np.zeros((pad, C),
+                                                      tokens.dtype)])
+            tables = np.concatenate([tables, np.full(
+                (pad, tables.shape[1]), self.scratch_block, tables.dtype)])
+            lengths = np.concatenate([lengths, np.repeat(lengths[:1], pad)])
+            chunk_lens = np.concatenate([chunk_lens,
+                                         np.zeros(pad, np.int32)])
+        try:
+            logits, new_pages, writes = self._extend_jit(
+                self.params, jnp.asarray(tokens),
+                self.call_pages(tables, lengths, C),
+                jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(chunk_lens),
+                jnp.asarray(self.scratch_block, jnp.int32),
+                impl=self.cfg.paged_impl)
+        except Exception:
+            self._pages = None
+            self._synced_version = -1
+            raise
+        self._pages = self.strip_tails(new_pages)
+        self.writeback_bytes += self.writeback_tokens(
+            batch.tables, batch.cache_lens, C, writes, B,
+            chunk_lens=chunk_lens[:B])
+        self.steps += 1
+        return np.asarray(logits.astype(jnp.float32))[:B, :Cmax]
+
+    def writeback_tokens(self, tables: np.ndarray, lengths: np.ndarray,
+                         C: int, writes, B: int,
+                         chunk_lens: Optional[np.ndarray] = None) -> int:
+        """O(tokens) host-store writeback of the per-token K/V returned by
+        ``decode_paged`` (C == 1, leaves (B, KV, D)), ``verify_paged``
+        (leaves (B, C, KV, D)) or ``extend_paged`` (same, ragged) — shared
+        by the paged and speculative backends so the host-coherency
+        contract lives in ONE place. Rows past ``B`` (speculative batch
+        padding) are dropped: their writes only exist in the scratch page.
+        ``chunk_lens`` (B,) slices each row to its REAL chunk (ragged mixed
+        steps); padded positions never reach the host store — only the
+        scratch page on device ever saw them. Returns bytes written."""
+        bs = self.cfg.block_size
+        if chunk_lens is None:
+            pos = lengths[:B, None].astype(np.int64) + np.arange(C)
+            blk = np.take_along_axis(tables[:B].astype(np.int64), pos // bs,
+                                     axis=1).reshape(-1)
+            off = (pos % bs).reshape(-1)
+        else:
+            rows = [lengths[b].astype(np.int64) + np.arange(chunk_lens[b])
+                    for b in range(B)]
+            pos = np.concatenate(rows)
+            blk = np.concatenate([tables[b].astype(np.int64)[p // bs]
+                                  for b, p in enumerate(rows)])
+            off = pos % bs
         writes_np = jax.device_get(writes)
         reps = {si: r for si, (p, r) in enumerate(self.model.cfg.stages)}
         idxs, payloads = [], []
         for (si, lkey, name, idx) in self.leaves:
             idxs.append(idx)
-            payloads.append(np.stack(
-                [np.asarray(writes_np[si][f"r{r}"][lkey][name])[:B].reshape(
-                    (B * C,) + writes_np[si][f"r{r}"][lkey][name].shape[-2:])
-                 for r in range(reps[si])]))  # (R, B*C, KV, D)
+            stacked = []
+            for r in range(reps[si]):
+                arr = np.asarray(writes_np[si][f"r{r}"][lkey][name])[:B]
+                arr = arr.reshape((B, C) + arr.shape[-2:])
+                if chunk_lens is None:
+                    arr = arr.reshape((B * C,) + arr.shape[-2:])
+                else:
+                    arr = np.concatenate(
+                        [arr[b, : chunk_lens[b]] for b in range(B)])
+                stacked.append(arr)
+            payloads.append(np.stack(stacked))  # (R, tokens, KV, D)
         return self.store.write_token_group(idxs, blk, off, payloads)

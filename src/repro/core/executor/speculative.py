@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.executor.base import ExecBatch, ModelRunner
 from repro.core.executor.paged import PagedRunner
+from repro.core.executor.state import next_pow2
 from repro.core.sampling import SamplingParams, sample_token
 
 
@@ -231,9 +232,7 @@ class SpeculativeRunner(ModelRunner):
         # Padding rows replay row 0's input but their block tables point
         # every entry at the reserved scratch block, so their page writes —
         # draft and target — land in a page no real table references.
-        Bp = 1
-        while Bp < B:
-            Bp *= 2
+        Bp = next_pow2(B)
         pad = Bp - B
         tables = batch.tables
         lengths = batch.cache_lens.astype(np.int32)

@@ -9,7 +9,9 @@ reads them:
   * the gathered path stages a dense (B, W) cache window per step — every
     byte moved is charged to ``host_copy_bytes``;
   * the paged path reads pages in place through block tables and only writes
-    the single new token's K/V back (O(tokens), not O(window)).
+    each chunk's own K/V back — one token per decode step, a whole prompt
+    chunk per prefill step, spanning page boundaries as needed
+    (O(tokens), not O(window); ``write_token_group``).
 
 Mutations bump ``version`` and record the touched block ids in
 ``dirty_blocks`` so device-resident mirrors (PagedRunner) can invalidate or
@@ -43,14 +45,22 @@ import numpy as np
 from repro.core.kv_quant import QuantConfig, dequantize, quantize
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n — the shared bucketing rule that bounds
+    jit-cache size wherever a batch dimension is shape-polymorphic (mirror
+    block updates, page packs, ragged extend batches, spec rows)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 def pad_pow2(x: np.ndarray) -> np.ndarray:
     """Pad axis 0 to a pow2 length by repeating the first element — bounds
     the jit-cache size of shape-polymorphic device calls (mirror block
     updates, page packs). Duplicates are harmless: packed/written payloads
     are idempotent per id, and pack callers slice padding back off."""
-    n = 1
-    while n < len(x):
-        n *= 2
+    n = next_pow2(len(x))
     if n == len(x):
         return x
     return np.concatenate([x, np.repeat(x[:1], n - len(x), axis=0)])

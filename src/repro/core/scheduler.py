@@ -44,13 +44,17 @@ class ChunkWork:
 
 @dataclasses.dataclass
 class StepPlan:
-    """One step's work, split by execution path.
+    """One step's work, split by work kind (docs/scheduling.md).
 
-    ``decode`` chunks (length 1, sequence past prefill) can run on a
-    decode-specialized backend straight off the paged KV stores; ``prefill``
-    chunks always take the gathered path. ``chunks`` is the unified
-    decode-first view (SplitFuse order) used when a single backend runs the
-    whole step."""
+    ``decode`` chunks (length 1, sequence past prefill) and ``prefill``
+    chunks (prompt or recompute spans) both run straight off the paged KV
+    stores on a paged-capable backend — ``chunks``, the unified decode-first
+    view (SplitFuse order), is what the engine marshals into ONE fused
+    ragged batch per step (``model.extend_paged``; ``model.decode_paged``
+    when every chunk is length 1). The split still matters to the
+    speculative backend, which takes the decode group through draft–verify
+    and leaves prefill chunks to the plain paged path, and to gathered-only
+    model families, which run ``chunks`` through ``model.extend``."""
     decode: List[ChunkWork] = dataclasses.field(default_factory=list)
     prefill: List[ChunkWork] = dataclasses.field(default_factory=list)
     # tokens of speculative headroom budgeted per decode chunk (0 = none);

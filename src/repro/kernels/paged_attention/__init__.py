@@ -1,10 +1,14 @@
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attend,
+    paged_attend_extend,
+    paged_attend_extend_quant,
     paged_attend_quant,
     paged_decode_attention,
     paged_decode_attention_quant,
 )
 from repro.kernels.paged_attention.ref import (  # noqa: F401
+    paged_attention_chunked_quant_ref,
+    paged_attention_chunked_ref,
     paged_attention_quant_ref,
     paged_attention_ref,
 )

@@ -59,6 +59,50 @@ def paged_attend(q, k_pages, v_pages, block_tables, lengths, *, scale: float,
     return out.reshape(B, 1, H, D)
 
 
+def paged_attend_extend(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale: float, impl: str = "auto"):
+    """Chunked extend attention (paged prefill / speculative verify):
+    q (B, C, H, D) -> out (B, C, H, D).
+
+    Query j of sequence b sits at absolute position ``lengths[b] + j``; the
+    chunk's K/V must already be written into the pages. Two dispatch
+    strategies with identical masking semantics (asserted against each
+    other in tests/test_kernels_paged.py):
+
+      * pallas/interpret — the C query positions FOLD INTO THE BATCH AXIS:
+        row b*C + j runs the single-token paged-attention kernel over
+        sequence b's block table with per-row validity ``lengths[b]+j+1``,
+        so one kernel launch covers all B*C rows and the kernel streams
+        each row's pages from HBM without materializing them;
+      * ref — the direct chunked oracle (``paged_attention_chunked_ref``),
+        which gathers/dequantizes each sequence's pages ONCE and masks the
+        (C, S) score tile two-regime (page-resident prefix + in-chunk
+        causal). Folding the jnp reference would duplicate every
+        sequence's page gather C times — measured 2x slower than the
+        GATHERED prefill it is supposed to beat.
+
+    Padding rows of ragged chunks (j beyond the row's real chunk length)
+    compute well-defined garbage the caller slices off."""
+    from repro.kernels.paged_attention.ref import paged_attention_chunked_ref
+
+    B, C, H, D = q.shape
+    KV = k_pages.shape[0]
+    G = H // KV
+    if _resolve(impl) == "ref":
+        out = paged_attention_chunked_ref(
+            q.reshape(B, C, KV, G, D), k_pages, v_pages,
+            block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+            scale=scale)
+        return out.reshape(B, C, H, D)
+    qf = q.reshape(B * C, 1, H, D)  # b-major: row b*C + j is (seq b, query j)
+    row_len = (lengths[:, None].astype(jnp.int32)
+               + jnp.arange(C, dtype=jnp.int32)[None, :] + 1).reshape(B * C)
+    tables_f = jnp.repeat(block_tables, C, axis=0)
+    out = paged_attend(qf, k_pages, v_pages, tables_f, row_len, scale=scale,
+                       impl=impl)
+    return out.reshape(B, C, H, D)
+
+
 # ---------------------------------------------------------------------------
 # quantized pages (KIVI at rest, docs/kv_quant.md)
 # ---------------------------------------------------------------------------
@@ -101,3 +145,48 @@ def paged_attend_quant(q, k_pages, v_pages, k_tail, v_tail, block_tables,
         tail_start.astype(jnp.int32), scale=scale, deq_dtype=deq_dtype,
         impl=impl)
     return out.reshape(B, 1, H, D)
+
+
+def paged_attend_extend_quant(q, k_pages, v_pages, k_tail, v_tail,
+                              block_tables, lengths, tail_start, *,
+                              scale: float, deq_dtype: str = "float32",
+                              impl: str = "auto"):
+    """Chunked extend attention over quantized pages: q (B, C, H, D) ->
+    (B, C, H, D), the quantized twin of ``paged_attend_extend``.
+
+    Quantized page slots serve positions ``< tail_start[b]``; everything
+    from ``tail_start`` up — the still-filling page AND this chunk's own
+    K/V, already placed at their tail slots — arrives in the shared fp
+    ``k_tail``/``v_tail`` (B, T, KV, D). The fold (pallas/interpret)
+    repeats each sequence's tail across its C query rows; row b*C + j
+    masks tail slots by its own validity ``lengths[b] + j + 1``, which is
+    what makes one shared tail correct for every in-chunk causal row. The
+    jnp ref dispatches to the direct chunked oracle instead
+    (``paged_attention_chunked_quant_ref``) — it gathers and dequantizes
+    each sequence's pages once rather than C times (same reasoning as
+    ``paged_attend_extend``)."""
+    from repro.kernels.paged_attention.ref import \
+        paged_attention_chunked_quant_ref
+
+    B, C, H, D = q.shape
+    KV = k_pages["codes"].shape[0]
+    G = H // KV
+    if _resolve(impl) == "ref":
+        out = paged_attention_chunked_quant_ref(
+            q.reshape(B, C, KV, G, D),
+            k_pages["codes"], k_pages["scale"], k_pages["zero"],
+            v_pages["codes"], v_pages["scale"], v_pages["zero"],
+            k_tail, v_tail, block_tables.astype(jnp.int32),
+            lengths.astype(jnp.int32), tail_start.astype(jnp.int32),
+            scale=scale, deq_dtype=jnp.dtype(deq_dtype))
+        return out.reshape(B, C, H, D)
+    qf = q.reshape(B * C, 1, H, D)
+    row_len = (lengths[:, None].astype(jnp.int32)
+               + jnp.arange(C, dtype=jnp.int32)[None, :] + 1).reshape(B * C)
+    out = paged_attend_quant(
+        qf, k_pages, v_pages,
+        jnp.repeat(k_tail, C, axis=0), jnp.repeat(v_tail, C, axis=0),
+        jnp.repeat(block_tables, C, axis=0), row_len,
+        jnp.repeat(tail_start, C), scale=scale, deq_dtype=deq_dtype,
+        impl=impl)
+    return out.reshape(B, C, H, D)

@@ -44,6 +44,87 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *, scale):
     return o.astype(q.dtype)
 
 
+def paged_attention_chunked_ref(q, k_pages, v_pages, block_tables, lengths,
+                                *, scale):
+    """Direct-masking oracle for chunked extend attention (paged prefill).
+
+    q: (B, C, KV, G, D) — C query positions per sequence; query j of
+    sequence b sits at absolute position ``lengths[b] + j`` and the chunk's
+    K/V is ALREADY in the pages (writes happen before attending, exactly
+    like the single-token op). Two validity regimes per (b, j) row — the
+    masking the folded dispatch in ops.py must reproduce:
+
+      * page-resident positions ``pos < lengths[b]``: always visible;
+      * in-chunk positions ``lengths[b] <= pos <= lengths[b] + j``: causal
+        within the chunk (query j sees chunk tokens 0..j).
+
+    Rows with ``j >= chunk_lens[b]`` are padding (ragged batches marshal to
+    a dense (B, C)); their outputs are well-defined garbage the caller
+    ignores. Returns (B, C, KV, G, D)."""
+    B, C, KV, G, D = q.shape
+    P = k_pages.shape[2]
+    NP = block_tables.shape[1]
+    k = jnp.swapaxes(k_pages[:, block_tables], 0, 1).reshape(B, KV, NP * P, D)
+    v = jnp.swapaxes(v_pages[:, block_tables], 0, 1).reshape(B, KV, NP * P, D)
+    s = jnp.einsum("bckgd,bksd->bckgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(NP * P)[None, None, :]  # (1, 1, S)
+    qpos = lengths[:, None] + jnp.arange(C)[None, :]  # (B, C) query positions
+    valid = pos <= qpos[:, :, None]  # page prefix + in-chunk causal, in one
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bckgs,bksd->bckgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_attention_chunked_quant_ref(q, k_codes, k_scale, k_zero, v_codes,
+                                      v_scale, v_zero, k_tail, v_tail,
+                                      block_tables, lengths, tail_start, *,
+                                      scale, deq_dtype=jnp.float32):
+    """Chunked-extend oracle over KIVI pages: q (B, C, KV, G, D), query j of
+    sequence b at absolute position ``lengths[b] + j``. Page slots serve
+    positions ``< tail_start[b]`` (dequantized once per SEQUENCE — the fold
+    would duplicate the gather C times); everything from ``tail_start`` up,
+    including the chunk's own K/V at its tail slots, comes from the shared
+    fp tail, masked per query row by in-chunk causality
+    (``pos <= lengths[b] + j``). -> (B, C, KV, G, D)."""
+    B, C, KV, G, D = q.shape
+    P = k_codes.shape[2]
+    NP = block_tables.shape[1]
+    T = k_tail.shape[1]
+    k = dequantize_page_leaves(k_codes[:, block_tables],
+                               k_scale[:, block_tables],
+                               k_zero[:, block_tables], deq_dtype)
+    v = dequantize_page_leaves(v_codes[:, block_tables],
+                               v_scale[:, block_tables],
+                               v_zero[:, block_tables], deq_dtype)
+    k = jnp.swapaxes(k, 0, 1).reshape(B, KV, NP * P, D)
+    v = jnp.swapaxes(v, 0, 1).reshape(B, KV, NP * P, D)
+    k = jnp.concatenate([k, jnp.swapaxes(k_tail.astype(k.dtype), 1, 2)], 2)
+    v = jnp.concatenate([v, jnp.swapaxes(v_tail.astype(v.dtype), 1, 2)], 2)
+    qpos = lengths[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    pos_pages = jnp.arange(NP * P)[None, None, :]
+    pos_tail = (tail_start[:, None] + jnp.arange(T)[None, :])[:, None, :]
+    valid = jnp.concatenate(
+        [jnp.broadcast_to(pos_pages < tail_start[:, None, None],
+                          (B, C, NP * P)),
+         pos_tail <= qpos[:, :, None]], axis=-1)  # (B, C, S + T)
+    s = jnp.einsum("bckgd,bksd->bckgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bckgs,bksd->bckgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def dequantize_page_leaves(codes, scale, zero, deq_dtype):
     """uint8 codes (+ broadcastable scale/zero planes) -> values in the
     cache's logical dtype.

@@ -417,13 +417,20 @@ def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
     slots here (a functional scatter, NOT into the quantized pages — pack
     stats come from complete pages only, host-side on fill) and come back
     in ``(k_new, v_new)`` for the staging writeback. Query positions fold
-    into the batch axis as in ``attn_verify_paged``; row b*C + j sees
+    into the batch axis (``paged_attend_extend_quant``); row b*C + j sees
     quantized positions [0, tail_start_b) plus tail tokens up to its own.
+    A prefill chunk crossing page boundaries works unchanged: the linear
+    tail covers [tail_start, tail_start + P + C), so every token of the
+    chunk has a tail slot no matter how many page fills it spans — the
+    pages only ever serve positions below ``tail_start``.
 
     Returns (out (B, C, d), pages UNCHANGED, (k_new, v_new)) with
-    k_new/v_new (B, C, KV, D).
+    k_new/v_new (B, C, KV, D). Ragged chunks need no scratch redirect here:
+    padded positions land in the row's OWN tail slots past its valid
+    length, which nothing reads and which are rebuilt from host staging
+    next step anyway.
     """
-    from repro.kernels.paged_attention import paged_attend_quant
+    from repro.kernels.paged_attention import paged_attend_extend_quant
 
     B, C, _ = x.shape
     q, k, v = _qkv(p, cfg, x)
@@ -444,15 +451,10 @@ def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
     k_tail = pages["k"]["tail"].at[bidx, slots].set(k_new)
     v_tail = pages["v"]["tail"].at[bidx, slots].set(v_new)
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
-    H = q.shape[2]
-    qf = q.reshape(B * C, 1, H, -1)  # b-major: row b*C + j is (seq b, query j)
-    out = paged_attend_quant(
-        qf, pages["k"], pages["v"],
-        jnp.repeat(k_tail, C, axis=0), jnp.repeat(v_tail, C, axis=0),
-        jnp.repeat(block_tables, C, axis=0), (pos + 1).reshape(B * C),
-        jnp.repeat(tail_start, C), scale=scale,
-        deq_dtype=cfg.dtype, impl=impl)
-    out = proj_out(p["wo"], out.reshape(B, C, H, -1))
+    out = paged_attend_extend_quant(
+        q, pages["k"], pages["v"], k_tail, v_tail, block_tables, lengths,
+        tail_start, scale=scale, deq_dtype=cfg.dtype, impl=impl)
+    out = proj_out(p["wo"], out)
     return out, pages, (k_new, v_new)
 
 
@@ -503,27 +505,41 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
-def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
+def attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
+                      chunk_lens=None, scratch_block=None,
                       impl: str = "auto"):
-    """Multi-token scoring directly against block-indexed page stores.
+    """Multi-token extend directly against block-indexed page stores — the
+    paged twin of ``_attn_extend``'s gathered-window chunk attention.
 
     x: (B, C, d) — C new tokens per sequence at positions
     [lengths, lengths + C); pages: {"k","v"}: (KV, NB, P, D); block_tables:
     (B, NP); lengths: (B,) valid tokens BEFORE this chunk. All C tokens' K/V
-    are written in place first (in-chunk causality: query j must see drafts
-    0..j-1), then the C query positions FOLD INTO THE BATCH AXIS — row
-    b*C + j attends over sequence b's block table with validity
-    ``lengths[b] + j + 1`` — so the single-token paged-attention op is reused
-    unchanged. This is the target's speculative verify and the draft's
-    paged catch-up/prefill; ``attn_decode_paged`` is exactly the C == 1
-    special case. Global attention only, same as the decode path.
+    are written in place first — multi-token writes span page boundaries
+    naturally, ``blk = table[pos // P]`` per position — then the C query
+    positions fold into the paged-attention op's batch axis
+    (``paged_attend_extend``): row b*C + j attends with validity
+    ``lengths[b] + j + 1``, which covers both the page-resident prefix and
+    in-chunk causality (query j sees chunk tokens 0..j). This one routine
+    is the engine's paged PREFILL path, the target's speculative verify and
+    the draft's paged catch-up; ``attn_decode_paged`` is the C == 1 case.
+    Global attention only, same as the decode path.
+
+    Ragged batches (mixed decode + prefill chunks of different lengths —
+    the SplitFuse fused step): ``chunk_lens`` (B,) gives each row's REAL
+    chunk length; padded positions ``j >= chunk_lens[b]`` redirect their
+    page write to ``scratch_block`` — a block the engine reserves outside
+    every real table — so ragged padding can never corrupt a neighbouring
+    sequence's page (the same sacrificial-page idiom the speculative
+    runner uses for batch-padding rows). ``chunk_lens=None`` means all C
+    positions are real (the speculative verify case).
 
     Returns (out (B, C, d), new_pages, (k_new, v_new)) with k_new/v_new
     (B, C, KV, D) — the written K/V, for the host-store writeback.
     Quantized stores route to ``_attn_chunk_quant`` (fp tail, no device
-    page writes) — speculative verify composes with KIVI pages unchanged.
+    page writes — no scratch needed) — prefill and speculative verify
+    compose with KIVI pages unchanged.
     """
-    from repro.kernels.paged_attention import paged_attend
+    from repro.kernels.paged_attention import paged_attend_extend
 
     if quantized_pages(pages):
         return _attn_chunk_quant(p, cfg, spec, x, pages, block_tables,
@@ -536,7 +552,12 @@ def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     P = pages["k"].shape[2]
-    blk = block_tables[jnp.arange(B)[:, None], pos // P].reshape(B * C)
+    blk = block_tables[jnp.arange(B)[:, None], pos // P]
+    if chunk_lens is not None:
+        padded = jnp.arange(C, dtype=jnp.int32)[None, :] >= \
+            chunk_lens.astype(jnp.int32)[:, None]
+        blk = jnp.where(padded, jnp.asarray(scratch_block, blk.dtype), blk)
+    blk = blk.reshape(B * C)
     off = (pos % P).reshape(B * C)
     k_new = k.astype(pages["k"].dtype)  # (B, C, KV, D)
     v_new = v.astype(pages["v"].dtype)
@@ -545,13 +566,18 @@ def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     v_pages = pages["v"].at[:, blk, off].set(
         jnp.moveaxis(v_new.reshape((B * C,) + v_new.shape[2:]), 1, 0))
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
-    H = q.shape[2]
-    qf = q.reshape(B * C, 1, H, -1)  # b-major: row b*C + j is (seq b, query j)
-    tables_f = jnp.repeat(block_tables, C, axis=0)
-    out = paged_attend(qf, k_pages, v_pages, tables_f, (pos + 1).reshape(B * C),
-                       scale=scale, impl=impl)
-    out = proj_out(p["wo"], out.reshape(B, C, H, -1))
+    out = paged_attend_extend(q, k_pages, v_pages, block_tables, lengths,
+                              scale=scale, impl=impl)
+    out = proj_out(p["wo"], out)
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
+
+
+def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
+                      impl: str = "auto"):
+    """Speculative verify: C-token scoring on paged KV — ``attn_extend_paged``
+    with every position real (uniform k+1 chunks need no ragged padding)."""
+    return attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths,
+                             impl=impl)
 
 
 def init_attn_cache(cfg, batch, max_seq, dtype):

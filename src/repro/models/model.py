@@ -1,12 +1,19 @@
 """Model factory: assembles any assigned architecture from its ModelConfig.
 
-Three entry points per model (all pure functions over a param pytree):
+Entry points per model (all pure functions over a param pytree):
 
   * ``forward(params, batch)``        — full-sequence training forward
   * ``extend(params, tokens, cache, cache_len)`` — append a chunk (prefill,
     chunked prefill, batched prefill); prefill == extend from an empty cache
   * ``decode(params, tokens, cache, cache_len)`` — one-token decode step with
     per-mixer optimized paths (absorbed MLA, O(1) SSM recurrence)
+
+Pure global-attention stacks additionally get the paged family — the same
+semantics straight off block-indexed page stores, no gathered window
+(``paged_decode_supported``): ``decode_paged`` (one token),
+``extend_paged`` (chunked prefill / ragged mixed batches) and
+``verify_paged`` (speculative scoring; ``extend_paged`` with uniform
+chunks).
 
 Layer stacks run as ``lax.scan`` over stacked per-repeat params (see configs
 ``stages``); heterogeneous patterns are unrolled inside the scan body.
@@ -268,12 +275,16 @@ def _layer_decode_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
     return x, new_pages, kv_new
 
 
-def _layer_verify_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
+def _layer_extend_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
+                        chunk_lens=None, scratch_block=None,
                         impl: str = "auto"):
-    """C-token scoring with attention running directly on page stores."""
+    """C-token extend/scoring with attention running directly on page
+    stores; ``chunk_lens``/``scratch_block`` handle ragged chunk batches
+    (see ``attn_extend_paged``)."""
     h = apply_norm(cfg.norm, p["norm1"], x)
-    y, new_pages, kv_new = attn.attn_verify_paged(
-        p["mixer"], cfg, spec, h, pages, block_tables, lengths, impl=impl)
+    y, new_pages, kv_new = attn.attn_extend_paged(
+        p["mixer"], cfg, spec, h, pages, block_tables, lengths,
+        chunk_lens=chunk_lens, scratch_block=scratch_block, impl=impl)
     x = x + y
     x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
     return x, new_pages, kv_new
@@ -321,6 +332,7 @@ class Model(NamedTuple):
     init_cache: Callable
     decode_paged: Optional[Callable] = None  # only when paged_decode_supported
     verify_paged: Optional[Callable] = None  # C-token scoring on paged KV
+    extend_paged: Optional[Callable] = None  # chunked prefill on paged KV
 
 
 def _stack_layers_axis(tree):
@@ -700,18 +712,26 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = head(params, x)
         return logits, tuple(new_stages), tuple(writes)
 
-    # ---------------- verify_paged (C tokens, no gathered window) -------------
-    def verify_paged(params, tokens, pages, block_tables, lengths, *,
+    # ---------------- extend_paged (C-token chunks, no gathered window) -------
+    def extend_paged(params, tokens, pages, block_tables, lengths,
+                     chunk_lens=None, scratch_block=None, *,
                      impl: str = "auto"):
-        """Score C tokens per sequence straight off the page stores.
+        """Append/score a chunk of C tokens per sequence straight off the
+        page stores — paged chunked prefill (survey §III.A/§IV.A), the
+        paged twin of ``extend``.
 
         tokens: (B, C) at positions [lengths, lengths + C); pages / tables /
-        lengths as in ``decode_paged``. The speculative verify step (target
-        scores the k drafts + 1 bonus position in one forward) and the
-        draft's paged catch-up both run through here; ``decode_paged`` is
-        the C == 1 case. Layer loop unrolled for the same donation reason.
-        Returns (logits (B, C, V), new_pages, kv_writes) with write leaves
-        (B, C, KV, D) for the host-store writeback."""
+        lengths as in ``decode_paged``. Each chunk's K/V is written into its
+        page slots in place (multi-token writes span page boundaries) and
+        the C query positions fold into the paged-attention op's batch axis.
+        Ragged batches — one fused SplitFuse step mixing decodes (length 1)
+        with prompt chunks of different lengths — pass ``chunk_lens`` (B,)
+        and a ``scratch_block`` where padded positions' writes land (see
+        ``attn_extend_paged``); the logits of padded positions are garbage
+        the caller ignores. Layer loop unrolled for the same donation
+        reason as ``decode_paged``. Returns (logits (B, C, V), new_pages,
+        kv_writes) with write leaves (B, C, KV, D) for the host-store
+        writeback (padded entries to be sliced off by the caller)."""
         B, C = tokens.shape
         x = embed_tokens(params, tokens)
         if cfg.learned_positions:
@@ -730,9 +750,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 new_c = {}
                 w_c = {}
                 for i, spec in enumerate(pattern):
-                    x, nc, kv_new = _layer_verify_paged(
+                    x, nc, kv_new = _layer_extend_paged(
                         p_r[f"l{i}"], spec, cfg, x,
                         pages[si][f"r{r}"][f"l{i}"], block_tables, lengths,
+                        chunk_lens=chunk_lens, scratch_block=scratch_block,
                         impl=impl)
                     new_c[f"l{i}"] = nc
                     w_c[f"l{i}"] = {"k": kv_new[0], "v": kv_new[1]}
@@ -743,8 +764,20 @@ def build_model(cfg: ModelConfig) -> Model:
         logits = head(params, x)
         return logits, tuple(new_stages), tuple(writes)
 
+    # ---------------- verify_paged (C tokens, no gathered window) -------------
+    def verify_paged(params, tokens, pages, block_tables, lengths, *,
+                     impl: str = "auto"):
+        """Score C tokens per sequence straight off the page stores: the
+        speculative verify step (target scores the k drafts + 1 bonus
+        position in one forward) and the draft's paged catch-up. Exactly
+        ``extend_paged`` with every position real (uniform chunks need no
+        ragged padding); ``decode_paged`` is the C == 1 case."""
+        return extend_paged(params, tokens, pages, block_tables, lengths,
+                            impl=impl)
+
     paged_ok = paged_decode_supported(cfg)
     return Model(cfg=cfg, init=init, forward=forward, extend=extend, decode=decode,
                  init_cache=init_cache,
                  decode_paged=decode_paged if paged_ok else None,
-                 verify_paged=verify_paged if paged_ok else None)
+                 verify_paged=verify_paged if paged_ok else None,
+                 extend_paged=extend_paged if paged_ok else None)

@@ -180,7 +180,9 @@ def test_paged_matches_gathered_logits(olmo, rng, block_size):
 
 def test_paged_matches_gathered_mixed_steps(olmo, rng):
     """Long prompts + tight chunking force steps that mix in-flight prefill
-    (gathered) with decodes (paged); tokens must still match end-to-end."""
+    chunks with decodes; the whole ragged plan fuses into one paged
+    dispatch (extend_paged) and tokens must still match end-to-end —
+    with ZERO window staging anywhere, prefill included."""
     cfg, m, params = olmo
     r = np.random.default_rng(11)
     prompts = [list(map(int, r.integers(2, cfg.vocab_size, size=n)))
@@ -188,8 +190,114 @@ def test_paged_matches_gathered_mixed_steps(olmo, rng):
     g = _drive(m, params, _cfg(backend="gathered"), prompts, max_new=8)
     p = _drive(m, params, _cfg(backend="auto"), prompts, max_new=8)
     assert p.paged_steps > 0
+    assert p.host_copy_bytes == 0  # no gathered fallback, even for prefill
+    assert p.paged_steps == p.steps  # every step ran on the paged backend
     for i in range(len(prompts)):
         assert g.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
+
+
+def test_paged_prefill_mid_decode_arrival(olmo):
+    """A long prompt arriving while another sequence decodes produces true
+    mixed SplitFuse steps (decode chunk length 1 + prefill chunks length
+    16 in ONE ExecBatch); parity and zero-gather must survive them."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(23)
+    short = list(map(int, r.integers(2, cfg.vocab_size, size=9)))
+    long = list(map(int, r.integers(2, cfg.vocab_size, size=60)))
+
+    def run(backend):
+        eng = LLMEngine(m, params, _cfg(backend=backend))
+        eng.add_request(Request(request_id="fg", prompt=short,
+                                sampling=SamplingParams(max_new_tokens=16)))
+        arrived = False
+        while eng.scheduler.has_work():
+            eng.step()
+            if not arrived and len(eng.seqs["fg"].generated) >= 3:
+                eng.add_request(Request(
+                    request_id="bg", prompt=long,
+                    sampling=SamplingParams(max_new_tokens=4)))
+                arrived = True
+        return eng
+
+    g, p = run("gathered"), run("auto")
+    assert p.host_copy_bytes == 0
+    for rid in ("fg", "bg"):
+        assert g.seqs[rid].generated == p.seqs[rid].generated, rid
+
+
+def test_extras_first_chunk_routes_gathered_with_extras_intact(olmo):
+    """A first prompt chunk carrying modality extras must run on the
+    gathered runner AS ITS OWN GROUP: fused with other chunks,
+    marshal_batch drops the extras ("mixed first/non-first chunks") and the
+    paged supports() check would wave the batch through extend_paged,
+    which has no splice path — silent wrong logits on VLM/audio stacks."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(47)
+    eng = LLMEngine(m, params, _cfg(backend="auto"))
+    seen = {"gathered": [], "paged": []}
+    for name, runner in (("gathered", eng.runner), ("paged", eng.paged_runner)):
+        orig = runner.execute
+
+        def capture(batch, _orig=orig, _name=name):
+            seen[_name].append(batch)
+            return _orig(batch)
+
+        runner.execute = capture
+    eng.add_request(Request(request_id="fg", prompt=list(map(int, r.integers(
+        2, cfg.vocab_size, size=9))), sampling=SamplingParams(max_new_tokens=12)))
+    arrived = False
+    while eng.scheduler.has_work():
+        eng.step()
+        if not arrived and len(eng.seqs["fg"].generated) >= 2:
+            # extras request arrives mid-decode: its first chunk would fuse
+            # with fg's decode chunk were it not peeled off (olmo ignores
+            # the extras payload itself — this pins ROUTING, not splicing)
+            eng.add_request(Request(
+                request_id="vx", prompt=list(map(int, r.integers(
+                    2, cfg.vocab_size, size=12))),
+                sampling=SamplingParams(max_new_tokens=2),
+                extras={"vision_embeds": np.zeros((4, cfg.d_model),
+                                                  np.float32)}))
+            arrived = True
+    vx_first = [(name, b) for name in seen for b in seen[name]
+                if any(c.seq.request_id == "vx" and c.start == 0
+                       for c in b.chunks)]
+    assert vx_first, "vx's first chunk never executed"
+    for name, b in vx_first:
+        assert name == "gathered", "extras first chunk fused into paged batch"
+        assert b.extras is not None and "vision_embeds" in b.extras
+        assert all(c.seq.request_id == "vx" for c in b.chunks)
+    # everything else still fused paged: no other gathered dispatches
+    assert all(any(c.seq.request_id == "vx" and c.start == 0
+                   for c in b.chunks) for b in seen["gathered"])
+
+
+def test_paged_prefill_exact_block_multiple_prompt(olmo):
+    """A fully-cached prompt whose length is an exact block multiple hits
+    the ``matched = len(prompt) - 1`` recompute guard: the paged prefill
+    chunk starts at a block boundary and recomputes exactly one block.
+    Both backends must emit identical tokens from that state."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(29)
+    prompt = list(map(int, r.integers(2, cfg.vocab_size, size=24)))  # 3 blocks
+
+    def run(backend):
+        eng = LLMEngine(m, params, _cfg(backend=backend))  # block_size=8
+        eng.add_request(Request(request_id="r0", prompt=prompt,
+                                sampling=SamplingParams(max_new_tokens=4)))
+        eng.run()
+        # identical prompt: lookup matches all 3 blocks, guard caps at 23
+        # -> usable 16, the last block's 8 tokens recompute as one chunk
+        eng.add_request(Request(request_id="r1", prompt=list(prompt),
+                                sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        return eng
+
+    g, p = run("gathered"), run("auto")
+    assert p.seqs["r1"].prefix_hit_tokens == 16
+    assert p.host_copy_bytes == 0
+    assert g.seqs["r1"].generated == p.seqs["r1"].generated
+    assert g.seqs["r0"].generated == p.seqs["r0"].generated
 
 
 def test_paged_with_prefix_cache_and_preemption(olmo):
@@ -386,6 +494,28 @@ def test_quant_paged_cow_preemption_coherency(olmo):
     for i in range(len(prompts)):
         assert engines["gathered"].seqs[f"r{i}"].generated == \
             engines["auto"].seqs[f"r{i}"].generated, i
+
+
+def test_quant_prefill_chunks_crossing_page_boundaries(olmo):
+    """Quantized paged prefill with chunks spanning several page fills per
+    write (block_size 4, chunk 12): the chunk's tokens ride the fp tail,
+    the host writeback stages them and packs every page the chunk fills —
+    bytes must equal the gathered reference's token-for-token."""
+    cfg, m, params = olmo
+    r = np.random.default_rng(43)
+    prompts = [list(map(int, r.integers(2, cfg.vocab_size, size=n)))
+               for n in (30, 17, 11)]
+    kw = dict(block_size=4,
+              scheduler=SchedulerConfig(max_batch_slots=4,
+                                        max_batched_tokens=48,
+                                        prefill_chunk=12))
+    g = _drive(m, params, _quant_cfg(backend="gathered", **kw), prompts,
+               max_new=6)
+    p = _drive(m, params, _quant_cfg(backend="auto", **kw), prompts,
+               max_new=6)
+    assert p.paged_steps == p.steps and p.host_copy_bytes == 0
+    for i in range(len(prompts)):
+        assert g.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
 
 
 def test_quant_paged_kernel_interpret_path(olmo):

@@ -9,11 +9,12 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import kv_quant as core_kv_quant
 from repro.kernels.kv_quant import quantize_kv_pages
-from repro.kernels.paged_attention import (paged_attend,
+from repro.kernels.paged_attention import (paged_attend, paged_attend_extend,
                                            paged_decode_attention,
                                            paged_decode_attention_quant)
 from repro.kernels.paged_attention.paged_attention import paged_attention_quant
-from repro.kernels.paged_attention.ref import (paged_attention_quant_ref,
+from repro.kernels.paged_attention.ref import (paged_attention_chunked_ref,
+                                               paged_attention_quant_ref,
                                                paged_attention_ref)
 
 CASES = [
@@ -85,6 +86,55 @@ def test_model_layout_adapter_matches_decode_attention(rng):
     ref = decode_attention(q, jnp.swapaxes(k_cat, 1, 2), jnp.swapaxes(v_cat, 1, 2),
                            lengths, scale=0.2)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked extend (paged prefill): batch-axis fold vs direct-masking oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C", [2, 5, 8])
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_extend_fold_matches_chunked_oracle(C, impl, rng):
+    """ops.paged_attend_extend (C query positions folded into the batch
+    axis, per-row lengths) must equal the direct two-regime masking oracle
+    (page-resident prefix + in-chunk causal) — chunk starts crossing page
+    boundaries included."""
+    B, KV, G, D, P, NB, NP = 3, 2, 4, 32, 8, 32, 4
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    tables = jnp.asarray(
+        np.stack([rng.choice(NB, size=NP, replace=False) for _ in range(B)]),
+        jnp.int32)
+    # chunk start anywhere, including mid-page and page-boundary starts
+    lengths = jnp.asarray([0, P - 1, 2 * P], jnp.int32)[:B]
+    out = paged_attend_extend(q, k, v, tables, lengths, scale=0.2, impl=impl)
+    ref = paged_attention_chunked_ref(
+        q.reshape(B, C, KV, G, D), k, v, tables, lengths, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref).reshape(B, C, H, D), atol=1e-5)
+
+
+def test_extend_in_chunk_causality(rng):
+    """Query j must see chunk tokens 0..j and nothing later: poisoning
+    chunk token j+1's K/V in the pages must not change query j's output."""
+    B, KV, G, D, P, NB, NP, C = 1, 2, 2, 32, 8, 8, 4, 4
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(KV, NB, P, D)), jnp.float32)
+    tables = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    lengths = jnp.asarray([6], jnp.int32)  # chunk spans positions 6..9
+    out1 = paged_attend_extend(q, k, v, tables, lengths, scale=0.2, impl="ref")
+    # poison position 9 (= chunk token 3): block 1, offset 1
+    k2 = k.at[:, 1, 1].set(1e6)
+    v2 = v.at[:, 1, 1].set(-1e6)
+    out2 = paged_attend_extend(q, k2, v2, tables, lengths, scale=0.2,
+                               impl="ref")
+    np.testing.assert_allclose(np.asarray(out1[:, :3]),
+                               np.asarray(out2[:, :3]), atol=1e-6)
+    assert not np.allclose(np.asarray(out1[:, 3]), np.asarray(out2[:, 3]))
 
 
 # ---------------------------------------------------------------------------

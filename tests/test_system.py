@@ -34,9 +34,11 @@ def test_serve_batch_end_to_end(rng):
         assert met.e2e > 0
     # fairness accounting saw both users
     assert eng.vtc.service("user-0") > 0 and eng.vtc.service("user-1") > 0
-    # all sequence memory was released
+    # all sequence memory was released (the paged runner keeps exactly one
+    # reserved scratch block for ragged-chunk padding writes)
     cached = eng.prefix_cache.cached_device_blocks() if eng.prefix_cache else 0
-    assert eng.bm.used_blocks == cached
+    scratch = 1 if eng.paged_runner is not None else 0
+    assert eng.bm.used_blocks == cached + scratch
     # engine actually interleaved work (continuous batching)
     assert eng.steps < n * (50 // 16 + 10), "engine did not batch"
 

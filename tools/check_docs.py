@@ -1,19 +1,26 @@
 #!/usr/bin/env python
 """Documentation link checker (run by the CI docs job).
 
-Three guarantees:
+Five guarantees:
   1. every ``docs/*.md`` page is reachable from ``README.md`` by following
      markdown links — no orphaned documentation;
   2. every relative markdown link (``[x](path)``, optionally ``#anchored``)
      resolves to an existing file;
   3. every backticked code-path reference in a doc (`foo/bar.py`,
      `tests/test_x.py`, `docs/y.md`) resolves somewhere sensible in the
-     repo — doc rot from renames fails CI instead of lingering.
+     repo — doc rot from renames fails CI instead of lingering;
+  4. every ``benchmarks/bench_*.py`` is registered in the run.py harness or
+     referenced by a doc — benchmarks that fall out of both are
+     undiscoverable and rot;
+  5. every `EngineConfig.field` / `SchedulerConfig.field` /
+     `SpeculativeConfig.field` reference in a doc names a real dataclass
+     field (parsed from source with ``ast`` — no heavyweight imports).
 
 Exit code 0 = clean; 1 = problems (each printed as ``file: message``).
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
@@ -24,6 +31,17 @@ MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # `path/to/file.py` or `docs/page.md` inside backticks; a trailing
 # ::symbol / #anchor is tolerated and stripped
 CODE_REF = re.compile(r"`([\w./-]+\.(?:py|md|ya?ml|toml|txt))(?:::[\w.]+)?`")
+# `EngineConfig.max_model_len`-style config-field citations in doc prose
+CFG_REF = re.compile(r"`(EngineConfig|SchedulerConfig|SpeculativeConfig)"
+                     r"\.(\w+)`")
+
+# where each cited config dataclass is defined (parsed with ast, not
+# imported — the checker must run without jax installed)
+CFG_SOURCES = {
+    "EngineConfig": "src/repro/core/engine.py",
+    "SpeculativeConfig": "src/repro/core/engine.py",
+    "SchedulerConfig": "src/repro/core/scheduler.py",
+}
 
 # roots a bare code reference may be relative to (doc prose often writes
 # `core/engine.py` for src/repro/core/engine.py)
@@ -50,14 +68,48 @@ def resolve_code_ref(ref: str):
     return False
 
 
+def config_fields():
+    """{class name: set of dataclass field names}, parsed from source."""
+    out = {}
+    for cls, src in CFG_SOURCES.items():
+        tree = ast.parse((ROOT / src).read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == cls:
+                out[cls] = {
+                    st.target.id for st in node.body
+                    if isinstance(st, ast.AnnAssign)
+                    and isinstance(st.target, ast.Name)}
+    return out
+
+
+def check_bench_registry(all_text: str):
+    """Every benchmarks/bench_*.py must be registered in run.py's ALL
+    harness or at least referenced by README/docs prose."""
+    problems = []
+    run_py = (ROOT / "benchmarks" / "run.py").read_text()
+    for bench in sorted((ROOT / "benchmarks").glob("bench_*.py")):
+        name = bench.stem
+        # word-boundary match: "bench_spec" must not pass just because
+        # "bench_speculative" is registered
+        pat = re.compile(rf"\b{re.escape(name)}\b")
+        if not pat.search(run_py) and not pat.search(all_text):
+            problems.append(
+                f"benchmarks/{name}.py: not in the run.py registry nor "
+                "referenced by any doc — undiscoverable benchmark")
+    return problems
+
+
 def main() -> int:
     problems = []
     links = {}  # doc -> set of md files it links to
+    fields = config_fields()
+    all_text = []
     for doc in md_files():
         if not doc.exists():
             problems.append(f"{doc.relative_to(ROOT)}: missing")
             continue
         text = doc.read_text()
+        all_text.append(text)
         linked = set()
         for m in MD_LINK.finditer(text):
             target = m.group(1)
@@ -75,6 +127,13 @@ def main() -> int:
                 problems.append(
                     f"{doc.relative_to(ROOT)}: dangling code reference "
                     f"`{m.group(1)}`")
+        for m in CFG_REF.finditer(text):
+            cls, field = m.group(1), m.group(2)
+            if field not in fields.get(cls, set()):
+                problems.append(
+                    f"{doc.relative_to(ROOT)}: `{cls}.{field}` is not a "
+                    f"field of {cls} ({CFG_SOURCES[cls]})")
+    problems += check_bench_registry("\n".join(all_text))
 
     # reachability from README over the md link graph
     seen = set()
