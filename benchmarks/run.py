@@ -10,13 +10,14 @@ import sys
 import traceback
 
 from benchmarks import (bench_batching, bench_chunked_prefill, bench_disagg,
-                        bench_kernels, bench_kv_quant, bench_moe, bench_paging,
-                        bench_prefix_cache, bench_speculative)
+                        bench_kernels, bench_kv_quant, bench_lora, bench_moe,
+                        bench_paging, bench_prefix_cache, bench_speculative)
 
 ALL = [
     ("batching", bench_batching.main),
     ("paging", bench_paging.main),
     ("speculative", bench_speculative.main),
+    ("lora", bench_lora.main),
     ("prefix_cache", bench_prefix_cache.main),
     ("chunked_prefill", bench_chunked_prefill.main),
     ("kv_quant", bench_kv_quant.main),

@@ -9,6 +9,13 @@ from repro.core.executor import (  # noqa: F401
     SpeculativeRunner,
 )
 from repro.core.kv_quant import QuantConfig, quantize_kv, dequantize_kv  # noqa: F401
+from repro.core.lora import (  # noqa: F401
+    AdapterRegistry,
+    LoRAConfig,
+    PagedAdapterStore,
+    make_adapter,
+    merge_adapter,
+)
 from repro.core.metrics import (  # noqa: F401
     SpeculativeStats,
     VTCCounter,

@@ -57,6 +57,7 @@ from repro.core.executor.base import ModelRunner
 from repro.core.executor.speculative import SpeculativeRunner
 from repro.core.executor.state import PagedModelState  # noqa: F401 (re-export)
 from repro.core.kv_quant import QuantConfig
+from repro.core.lora import LoRAConfig, PagedAdapterStore
 from repro.core.metrics import (RequestMetrics, SpeculativeStats, VTCCounter,
                                 finalize_request)
 from repro.core.prefix_cache import PrefixCache
@@ -98,6 +99,7 @@ class EngineConfig:
     enable_prefix_cache: bool = True
     host_cache_blocks: int = 0  # AttentionStore host tier (0 = off)
     kv_quant: Optional[QuantConfig] = None  # KIVI pages at rest (docs/kv_quant.md)
+    lora: Optional[LoRAConfig] = None  # multi-tenant LoRA serving (docs/lora.md)
     execution_backend: str = "auto"  # auto | gathered | paged | speculative
     paged_impl: str = "auto"  # paged-attention op impl: auto | pallas | interpret | ref
     speculative: Optional[SpeculativeConfig] = None  # draft–verify decode
@@ -135,6 +137,31 @@ class LLMEngine:
             # and speculative batch-padding rows land here — reserved up
             # front so it can never be a member of a real block table
             self.paged_runner.scratch_block = self.bm.allocate(1)[0]
+        # multi-tenant LoRA (docs/lora.md): adapter deltas batch per row on
+        # every backend; the store rents KV pool pages so resident adapters
+        # and cache trade off under one memory budget
+        self.adapters: Optional[PagedAdapterStore] = None
+        if self.cfg.lora is not None:
+            if model.decode_paged is None:
+                raise ValueError(
+                    "EngineConfig.lora needs a pure global-attention stack "
+                    "(the LoRA sites assume the paged-capable layer layout)")
+            self.adapters = PagedAdapterStore(
+                model.cfg, self.cfg.lora, self.bm,
+                self.store.kv_bytes_per_block())
+            # one step can never reference more adapters than the device
+            # table holds resident — or than the pool-page cap can rent at
+            # once (a step's working set is protected from eviction, so an
+            # over-cap plan would walk the pressure ladder destructively
+            # and still fail) — clamp the scheduler's grouping cap to both
+            cap = self.cfg.lora.max_loaded_adapters
+            if self.cfg.lora.pool_pages:
+                cap = min(cap, self.cfg.lora.pool_pages
+                          // self.adapters.pages_per_adapter)
+            per_batch = self.scheduler.cfg.max_adapters_per_batch or cap
+            self.scheduler.cfg = dataclasses.replace(
+                self.scheduler.cfg,
+                max_adapters_per_batch=min(per_batch, cap))
         # speculative decoding layers on top of the paged backend; "auto"
         # opts in when a SpeculativeConfig is present, "speculative" demands it
         self.spec_runner: Optional[SpeculativeRunner] = None
@@ -170,6 +197,7 @@ class LLMEngine:
         self.steps = 0
         self.exact_chunks = sched_cfg.exact_chunks
         self._step_inflight: Optional[set] = None
+        self._step_adapters: Optional[set] = None
 
     @property
     def host_copy_bytes(self) -> int:
@@ -182,7 +210,22 @@ class LLMEngine:
         return self.paged_runner.steps if self.paged_runner is not None else 0
 
     # ------------------------------------------------------------------
+    def register_adapter(self, adapter_id: str, weights) -> None:
+        """Make a LoRA adapter servable (host-side registry; the paged
+        store faults it onto the device on first use). ``weights``: the
+        tree ``core.lora.make_adapter`` produces / a checkpoint loads."""
+        if self.adapters is None:
+            raise ValueError("EngineConfig.lora is not configured")
+        self.adapters.registry.register(adapter_id, weights)
+
+    # ------------------------------------------------------------------
     def add_request(self, req: Request) -> SeqState:
+        if req.adapter_id is not None and self.adapters is None:
+            # refuse rather than silently serve the tenant base weights
+            raise ValueError(
+                f"request {req.request_id!r} carries "
+                f"adapter_id={req.adapter_id!r} but EngineConfig.lora is "
+                "not configured on this engine")
         if req.arrival_time == 0.0:
             req.arrival_time = time.time()
         seq = SeqState(request=req)
@@ -197,7 +240,11 @@ class LLMEngine:
         hit blocks inserted by whichever of them prefilled first."""
         req = seq.request
         if self.prefix_cache is not None and len(req.prompt) > self.cfg.block_size:
-            dev_blocks, host_hashes, matched = self.prefix_cache.lookup(req.prompt)
+            # namespaced by adapter: a tenant's KV embeds its adapter's k/v
+            # deltas, so identical token prefixes under different adapters
+            # are NOT the same bytes and must never share blocks
+            dev_blocks, host_hashes, matched = self.prefix_cache.lookup(
+                req.prompt, namespace=req.adapter_id)
             matched = min(matched, len(req.prompt) - 1)  # recompute >=1 token for logits
             usable = matched // self.cfg.block_size * self.cfg.block_size
             keep = usable // self.cfg.block_size
@@ -232,14 +279,28 @@ class LLMEngine:
                     seq.state_slot = self.bm.allocate_state_slot()
                 return
             except OutOfBlocks:
-                if self.prefix_cache is not None and self.prefix_cache.evict(
-                        4, demote_payload_fn=(self.store.block_payload
-                                              if self.cfg.host_cache_blocks else None)):
-                    continue
-                victim = self._pick_victim(protected or {seq.request_id})
-                if victim is None:
+                if not self._relieve_pressure(protected or {seq.request_id}):
                     raise
-                self._do_preempt(victim)
+
+    def _relieve_pressure(self, protected: set) -> bool:
+        """One rung of the shared memory-pressure ladder (KV allocation and
+        adapter fault-in walk the SAME ladder): evict prefix-cache blocks,
+        else evict an idle LoRA adapter (resident adapters rent real pool
+        pages, and never one the current step's batch references), else
+        preempt a sequence outside ``protected``. False = nothing left."""
+        if self.prefix_cache is not None and self.prefix_cache.evict(
+                4, demote_payload_fn=(self.store.block_payload
+                                      if self.cfg.host_cache_blocks
+                                      else None)):
+            return True
+        if self.adapters is not None and self.adapters.evict_one(
+                self._step_adapters or set()):
+            return True
+        victim = self._pick_victim(protected)
+        if victim is None:
+            return False
+        self._do_preempt(victim)
+        return True
 
     def _pick_victim(self, protected: set) -> Optional[SeqState]:
         cands = [s for s in self.scheduler.running
@@ -281,13 +342,46 @@ class LLMEngine:
                 # cannot fit this chunk even after evictions: self-preempt and
                 # let the scheduler retry once memory frees up
                 self._do_preempt(ch.seq)
+        ready, lora = self._ensure_lora(ready, inflight)
         if not ready:
             return
         batch = marshal_batch(ready, self.cfg.block_size, self.cfg.max_model_len)
+        batch.lora = lora
         if not runner.supports(batch):
             runner = self.runner  # gathered fallback (e.g. extras in a decode)
         logits_np = runner.execute(batch)
         self._postprocess(ready, logits_np)
+
+    def _ensure_lora(self, chunks: List[ChunkWork], inflight: set):
+        """Fault the group's adapters into the paged store; returns the
+        (possibly reduced) chunk list plus the per-row slot ids + device
+        tables to attach to the marshalled batch. Loading rents pool
+        pages, so it walks the shared memory-pressure ladder; if even
+        that cannot rent the pages, adapter-bearing chunks self-preempt
+        out of the group (youngest first, same recovery as a KV
+        allocation failure) rather than crashing the step."""
+        if self.adapters is None:
+            return chunks, None
+        while True:
+            want = {c.seq.request.adapter_id for c in chunks
+                    if c.seq.request.adapter_id is not None}
+            try:
+                self.adapters.ensure(want)
+                break
+            except OutOfBlocks:
+                if self._relieve_pressure(inflight):
+                    continue
+                shed = [c for c in chunks
+                        if c.seq.request.adapter_id is not None]
+                if not shed:
+                    raise
+                drop = max(shed, key=lambda c: c.seq.request.arrival_time)
+                self._do_preempt(drop.seq)
+                chunks = [c for c in chunks if c is not drop]
+                if not chunks:
+                    return [], None
+        return chunks, self.adapters.marshal(
+            [c.seq.request.adapter_id for c in chunks])
 
     def _postprocess(self, chunks: List[ChunkWork], logits_np: np.ndarray) -> None:
         """Sampling, prefix-cache publication, accounting, stop conditions."""
@@ -303,7 +397,8 @@ class LLMEngine:
                 prompt_computed = min(seq.num_computed, seq.prompt_len)
                 nfull = prompt_computed // bs
                 self.prefix_cache.insert(seq.request.prompt[: nfull * bs],
-                                         seq.block_table[:nfull])
+                                         seq.block_table[:nfull],
+                                         namespace=seq.request.adapter_id)
             prompt_overlap = max(0, min(end, seq.prompt_len) - ch.start)
             if end < seq.total_len:
                 # prefill chunk (or recompute of generated tokens after
@@ -383,8 +478,12 @@ class LLMEngine:
             groups.setdefault((sp.temperature, sp.top_k), []).append(ch)
         for (temp, topk), group in groups.items():
             sp = SamplingParams(temperature=temp, top_k=topk)
+            group, lora = self._ensure_lora(group, inflight)
+            if not group:
+                continue
             batch = marshal_batch(group, self.cfg.block_size,
                                   self.cfg.max_model_len)
+            batch.lora = lora
             self._rng, r_draft, r_rej = jax.random.split(self._rng, 3)
             d_toks, d_logits, t_logits = self.spec_runner.execute_spec(
                 batch, k, sp, r_draft)
@@ -468,7 +567,8 @@ class LLMEngine:
     def _finish(self, seq: SeqState, now: float) -> None:
         seq.finish_time = now
         if self.prefix_cache is not None:
-            self.prefix_cache.insert(seq.all_tokens, seq.block_table)
+            self.prefix_cache.insert(seq.all_tokens, seq.block_table,
+                                     namespace=seq.request.adapter_id)
         self.scheduler.finish(seq)
         self._free_seq_memory(seq)
         if self.spec_runner is not None:
@@ -490,6 +590,8 @@ class LLMEngine:
             return 0
         self.steps += 1
         self._step_inflight = {c.seq.request_id for c in plan.chunks}
+        self._step_adapters = {c.seq.request.adapter_id for c in plan.chunks
+                               if c.seq.request.adapter_id is not None}
         try:
             if self._spec_active and plan.decode:
                 # speculative decode: draft k + verify k+1 per sequence;
@@ -534,6 +636,7 @@ class LLMEngine:
                                         self.paged_runner or self.runner)
         finally:
             self._step_inflight = None
+            self._step_adapters = None
         return plan.num_tokens
 
     def run(self, max_steps: int = 10_000) -> List[RequestMetrics]:
@@ -571,6 +674,10 @@ class LLMEngine:
     def import_seq(self, payload: dict) -> SeqState:
         """Admit a migrated sequence; returns transferred bytes via .last_import_bytes."""
         req = payload["request"]
+        if req.adapter_id is not None and self.adapters is None:
+            raise ValueError(
+                f"migrated request {req.request_id!r} is bound to adapter "
+                f"{req.adapter_id!r} but this engine has no EngineConfig.lora")
         seq = SeqState(request=req, status=SeqStatus.RUNNING,
                        generated=list(payload["generated"]),
                        num_computed=payload["num_computed"],

@@ -34,13 +34,33 @@ class ExecBatch:
     """Marshalled per-step batch shared by runners.
 
     tokens: (B, C) int32; cache_lens: (B,) tokens already cached per seq;
-    tables: (B, nmax) block ids; slots: (B,) state slots (0 when unused)."""
+    tables: (B, nmax) block ids; slots: (B,) state slots (0 when unused).
+    ``lora`` is attached by the ENGINE after marshaling (it owns the
+    adapter store): {"ids": (B,) adapter-table slots, "stages": device
+    adapter tables} — see core/lora/store.py and docs/lora.md."""
     chunks: List[ChunkWork]
     tokens: np.ndarray
     cache_lens: np.ndarray
     tables: np.ndarray
     slots: np.ndarray
     extras: Optional[dict] = None
+    lora: Optional[dict] = None
+
+
+def lora_arg(batch_lora: Optional[dict], pad_rows: int = 0):
+    """Build the model-facing lora operand from a marshalled batch's lora
+    attachment — shared by every runner so id padding follows one rule:
+    padding rows (pow2 batch bucketing, spec batch padding) get the NULL
+    adapter slot 0; their logits are sliced off / their writes land in the
+    scratch page, so the zero delta is never observed anyway."""
+    if batch_lora is None:
+        return None
+    import jax.numpy as jnp
+
+    ids = batch_lora["ids"]
+    if pad_rows:
+        ids = np.concatenate([ids, np.zeros(pad_rows, ids.dtype)])
+    return {"ids": jnp.asarray(ids), "stages": batch_lora["stages"]}
 
 
 def chunk_carries_extras(ch: ChunkWork) -> bool:

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.base import ExecBatch, ModelRunner, lora_arg
 from repro.core.executor.state import PagedModelState
 
 
@@ -41,7 +41,8 @@ class GatheredRunner(ModelRunner):
         cache = self.store.gather(batch.tables, batch.slots)
         logits, new_cache = self._extend_jit(
             self.params, jnp.asarray(batch.tokens), cache,
-            jnp.asarray(batch.cache_lens), batch=extras)
+            jnp.asarray(batch.cache_lens), batch=extras,
+            lora=lora_arg(batch.lora))
         self.store.scatter(new_cache, batch.tables, batch.slots,
                            [c.start for c in chunks],
                            [c.length for c in chunks],

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.base import ExecBatch, ModelRunner, lora_arg
 from repro.core.executor.state import PagedModelState, next_pow2, pad_pow2
 
 
@@ -224,7 +224,7 @@ class PagedRunner(ModelRunner):
                 self.params, jnp.asarray(batch.tokens),
                 self.call_pages(batch.tables, lengths, 1),
                 jnp.asarray(batch.tables), jnp.asarray(lengths),
-                impl=self.cfg.paged_impl)
+                lora=lora_arg(batch.lora), impl=self.cfg.paged_impl)
         except Exception:
             # self._pages was donated into the failed call and may now hold
             # deleted buffers; drop the mirror so the next step re-uploads
@@ -288,6 +288,7 @@ class PagedRunner(ModelRunner):
                 jnp.asarray(tables), jnp.asarray(lengths),
                 jnp.asarray(chunk_lens),
                 jnp.asarray(self.scratch_block, jnp.int32),
+                lora=lora_arg(batch.lora, pad_rows=Bp - B),
                 impl=self.cfg.paged_impl)
         except Exception:
             self._pages = None

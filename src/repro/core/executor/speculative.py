@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor.base import ExecBatch, ModelRunner
+from repro.core.executor.base import ExecBatch, ModelRunner, lora_arg
 from repro.core.executor.paged import PagedRunner
 from repro.core.executor.state import next_pow2
 from repro.core.sampling import SamplingParams, sample_token
@@ -67,6 +67,12 @@ class SpeculativeRunner(ModelRunner):
             "draft and target must share a vocabulary"
         self.draft_model = draft_model
         self.draft_params = draft_params
+        # multi-tenant LoRA (docs/lora.md): the draft applies the target's
+        # adapter deltas whenever its config matches the target's (self-
+        # speculation, same-arch drafts) — better acceptance. A structurally
+        # different draft runs base-only; rejection sampling keeps outputs
+        # exactly target-distributed either way.
+        self.draft_lora_ok = draft_model.cfg == self.model.cfg
         self._verify_jit = jax.jit(self.model.verify_paged,
                                    static_argnames=("impl",),
                                    donate_argnums=(2,))
@@ -119,7 +125,7 @@ class SpeculativeRunner(ModelRunner):
         self._draft_tables.pop(request_id, None)
 
     # ------------------------------------------------------------------
-    def _sync_draft(self, seq, nmax: int) -> None:
+    def _sync_draft(self, seq, nmax: int, lora=None) -> None:
         """Bring draft KV for ``seq`` up to ``seq.num_computed`` positions.
 
         Chunked draft prefill over the paged store (pow2 chunk lengths keep
@@ -156,7 +162,7 @@ class SpeculativeRunner(ModelRunner):
                 _, self._draft_pages, _ = self._draft_extend_jit(
                     self.draft_params, jnp.asarray(chunk), self._draft_pages,
                     jnp.asarray(table), jnp.asarray([dc], np.int32),
-                    impl=self.cfg.paged_impl)
+                    lora=lora, impl=self.cfg.paged_impl)
             except Exception:
                 self._reset_draft()
                 raise
@@ -180,12 +186,13 @@ class SpeculativeRunner(ModelRunner):
         dm = self.draft_model
         impl = self.cfg.paged_impl
 
-        def propose(dparams, rng, tok0, pages, tables, lengths):
+        def propose(dparams, rng, tok0, pages, tables, lengths, lora):
             x = tok0  # (B, 1): the step's input token, at position lengths
             toks, qlogits = [], []
             for j in range(k + 1):
                 logits, pages, _ = dm.decode_paged(dparams, x, pages, tables,
-                                                   lengths + j, impl=impl)
+                                                   lengths + j, lora=lora,
+                                                   impl=impl)
                 if j == k:
                     break  # KV of proposal k is written; logits unused
                 lg = logits[:, -1]
@@ -224,8 +231,13 @@ class SpeculativeRunner(ModelRunner):
         assert self.supports(batch)
         self.paged.sync()
         nmax = batch.tables.shape[1]
-        for ch in batch.chunks:
-            self._sync_draft(ch.seq, nmax)
+        draft_lora = batch.lora if self.draft_lora_ok else None
+        for b, ch in enumerate(batch.chunks):
+            row = None
+            if draft_lora is not None:
+                row = lora_arg({"ids": draft_lora["ids"][b: b + 1],
+                                "stages": draft_lora["stages"]})
+            self._sync_draft(ch.seq, nmax, lora=row)
         B = len(batch.chunks)
         # pad the batch to pow2: as sequences drain, per-B jit recompiles of
         # the (large) propose/verify graphs would dominate wall time.
@@ -250,7 +262,7 @@ class SpeculativeRunner(ModelRunner):
         try:
             d_toks, d_logits, self._draft_pages = propose(
                 self.draft_params, rng, tok0, self._draft_pages, tables_j,
-                lens_j)
+                lens_j, lora_arg(draft_lora, pad_rows=pad))
         except Exception:
             # draft pages were donated into the failed call
             self._reset_draft()
@@ -260,7 +272,8 @@ class SpeculativeRunner(ModelRunner):
             t_logits, new_pages, writes = self._verify_jit(
                 self.params, ver_tokens,
                 self.paged.call_pages(tables, lengths, k + 1),
-                tables_j, lens_j, impl=self.cfg.paged_impl)
+                tables_j, lens_j, lora=lora_arg(batch.lora, pad_rows=pad),
+                impl=self.cfg.paged_impl)
         except Exception:
             # target mirror was donated; drop it so the next step re-uploads
             self.paged._pages = None

@@ -25,23 +25,50 @@ class FleetStats:
 
 class ServingFleet:
     def __init__(self, model, params, *, instances: int,
-                 engine_cfg: EngineConfig, rebalance_threshold: float = 0.25):
+                 engine_cfg: EngineConfig, rebalance_threshold: float = 0.25,
+                 adapter_affinity: float = 0.1):
         self.engines: List[LLMEngine] = [
             LLMEngine(model, params, engine_cfg) for _ in range(instances)]
         self.threshold = rebalance_threshold
+        # LoRA-aware routing (docs/lora.md): an instance that already holds
+        # the request's adapter resident scores this much "emptier" than
+        # raw block usage says — avoiding a duplicate adapter load (and a
+        # possible eviction) unless the load gap outweighs it
+        self.adapter_affinity = adapter_affinity
         self.stats = FleetStats()
+
+    # ------------------------------------------------------------------
+    def register_adapter(self, adapter_id: str, weights) -> None:
+        """Register a LoRA adapter fleet-wide: the host registry is shared
+        "disk", so every instance can fault the adapter in — which is what
+        lets live migration move an adapter-bound sequence anywhere."""
+        for eng in self.engines:
+            eng.register_adapter(adapter_id, weights)
 
     # ------------------------------------------------------------------
     def _load(self, eng: LLMEngine) -> float:
         """Instance load = fraction of KV blocks in use (Llumnix's memory-
-        pressure signal; running seqs would also work)."""
+        pressure signal; running seqs would also work). Resident LoRA
+        adapters rent pool pages, so they are part of this signal."""
         return eng.bm.used_blocks / eng.bm.num_blocks
 
     def least_loaded(self) -> LLMEngine:
         return min(self.engines, key=self._load)
 
+    def route(self, req: Request) -> LLMEngine:
+        """Least-loaded, tilted by adapter affinity."""
+
+        def score(eng: LLMEngine) -> float:
+            s = self._load(eng)
+            if req.adapter_id is not None and eng.adapters is not None \
+                    and eng.adapters.is_loaded(req.adapter_id):
+                s -= self.adapter_affinity
+            return s
+
+        return min(self.engines, key=score)
+
     def add_request(self, req: Request):
-        return self.least_loaded().add_request(req)
+        return self.route(req).add_request(req)
 
     # ------------------------------------------------------------------
     def rebalance(self) -> int:

@@ -1,0 +1,140 @@
+"""Adapter registry: host-side LoRA adapter weights, one entry per tenant.
+
+The registry is the "disk tier" of the multi-LoRA story: it holds every
+registered adapter's A/B factors as host numpy trees (in a real deployment
+these come from checkpoint files). The ``PagedAdapterStore`` faults
+adapters from here into device table slots on demand.
+
+Adapter tree layout mirrors the model's stacked-stage params so the
+gathered backend can scan it and the paged backends can index repeats:
+
+    tuple over stages of {"l{i}": {site: {"a": (R, Din, rank),
+                                          "b": (R, rank, Dout)}}}
+
+with sites ``wq/wk/wv/wo`` on every attention layer and ``w1/w2`` on every
+MLP layer (flattened head dims: Dout = H * head_dim for ``wq`` etc.).
+LoRA serving requires a pure global-attention stack — the same predicate
+as the paged decode path (``paged_decode_supported``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.lora.config import LoRAConfig
+
+
+def lora_layer_sites(cfg: ModelConfig, spec: LayerSpec) -> List[Tuple[str, int, int]]:
+    """(site name, Din, Dout) for one layer. Attention projections always;
+    MLP w1/w2 only when the layer's ff is a plain MLP (MoE experts are not
+    adapted — per-expert deltas are out of scope here)."""
+    assert spec.mixer == "attn", "LoRA serving needs a pure-attention stack"
+    d, f = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    from repro.models.common import is_glu
+    sites = [("wq", d, H * hd), ("wk", d, KV * hd), ("wv", d, KV * hd),
+             ("wo", H * hd, d)]
+    if spec.ff == "mlp":
+        out1 = 2 * f if is_glu(cfg.activation) else f
+        sites += [("w1", d, out1), ("w2", f, d)]
+    return sites
+
+
+def make_adapter(cfg: ModelConfig, lora: LoRAConfig, seed: int) -> Tuple:
+    """Synthesize a random adapter (the serving stand-in for a fine-tuned
+    checkpoint). B is intentionally NON-zero — train-time LoRA init zeroes
+    B, but a zero adapter is indistinguishable from the base model, which
+    would make every multi-tenant test/bench vacuous."""
+    rng = np.random.default_rng(seed)
+    r = lora.rank
+    stages = []
+    for pattern, reps in cfg.stages:
+        layers = {}
+        for i, spec in enumerate(pattern):
+            sites = {}
+            for name, din, dout in lora_layer_sites(cfg, spec):
+                sites[name] = {
+                    "a": rng.standard_normal((reps, din, r)).astype(np.float32)
+                    / np.sqrt(din),
+                    "b": rng.standard_normal((reps, r, dout)).astype(np.float32)
+                    / np.sqrt(r),
+                }
+            layers[f"l{i}"] = sites
+        stages.append(layers)
+    return tuple(stages)
+
+
+def adapter_nbytes(cfg: ModelConfig, lora: LoRAConfig) -> int:
+    """Host/device bytes of one adapter (f32 factors) — what the store
+    charges against the block pool when renting pages."""
+    total = 0
+    for pattern, reps in cfg.stages:
+        for spec in pattern:
+            for _, din, dout in lora_layer_sites(cfg, spec):
+                total += 4 * reps * lora.rank * (din + dout)
+    return total
+
+
+# where each site's delta lands in the model params tree, and how the flat
+# (Din, Dout) delta reshapes onto the stored weight
+_SITE_PATH = {"wq": "mixer", "wk": "mixer", "wv": "mixer", "wo": "mixer",
+              "w1": "ff", "w2": "ff"}
+
+
+def merge_adapter(params, adapter, cfg: ModelConfig, lora: LoRAConfig):
+    """Dense swap-merge baseline: fold ``A @ B * (alpha / rank)`` into the
+    base weights — what a single-tenant deployment would serve. Returns a
+    NEW params tree (host-side numpy math; base params untouched)."""
+    import jax
+
+    scale = lora.alpha / lora.rank
+    out = jax.tree.map(lambda x: x, params)  # shallow-ish copy of the tree
+    new_stages = []
+    for si, (pattern, reps) in enumerate(cfg.stages):
+        stage = dict(out["stages"][si])
+        for i, spec in enumerate(pattern):
+            layer = dict(stage[f"l{i}"])
+            for name, din, dout in lora_layer_sites(cfg, spec):
+                group = dict(layer[_SITE_PATH[name]])
+                site = dict(group[name])
+                w = np.asarray(site["w"])  # (R, din, ...) stored layout
+                ab = adapter[si][f"l{i}"][name]
+                delta = np.einsum("rdk,rko->rdo", ab["a"], ab["b"]) * scale
+                site["w"] = (w.astype(np.float32)
+                             + delta.reshape(w.shape)).astype(w.dtype)
+                group[name] = site
+                layer[_SITE_PATH[name]] = group
+            stage[f"l{i}"] = layer
+        new_stages.append(stage)
+    out = dict(out)
+    out["stages"] = tuple(new_stages)
+    return out
+
+
+class AdapterRegistry:
+    """adapter_id -> host adapter tree. Shared freely across engines (a
+    fleet registers each adapter once and every instance sees it — the
+    registry is read-only "disk", the per-engine store is the cache)."""
+
+    def __init__(self, cfg: ModelConfig, lora: LoRAConfig):
+        self.cfg = cfg
+        self.lora = lora
+        self._adapters: Dict[str, Tuple] = {}
+
+    def register(self, adapter_id: str, weights) -> None:
+        self._adapters[adapter_id] = weights
+
+    def get(self, adapter_id: str):
+        if adapter_id not in self._adapters:
+            raise KeyError(
+                f"adapter {adapter_id!r} not registered (known: "
+                f"{sorted(self._adapters)})")
+        return self._adapters[adapter_id]
+
+    def __contains__(self, adapter_id: str) -> bool:
+        return adapter_id in self._adapters
+
+    def ids(self) -> List[str]:
+        return sorted(self._adapters)

@@ -1,0 +1,204 @@
+"""S-LoRA-style paged adapter store: adapter weights rent KV pool pages.
+
+The store owns a device-resident stacked adapter table per (stage, layer,
+site) — shape ``(R, T, Din, rank)`` / ``(R, T, rank, Dout)`` with a FIXED
+pow2 slot capacity ``T`` (one jit shape forever) — and an LRU cache of
+which registry adapters occupy which slot. Slot 0 is the reserved null
+adapter (zeros): requests without an adapter ride every batched dispatch
+with a delta of exactly 0.
+
+Unified memory (the S-LoRA idea): loading an adapter RENTS pages from the
+engine's ``BlockManager`` — ``ceil(adapter_bytes / kv_block_bytes)`` of
+them — so adapter weights and KV cache trade off under one budget.
+``BlockManager.used_blocks`` therefore counts resident adapters too, which
+is what makes fleet load scoring and preemption pressure see them; evicting
+an adapter frees real KV capacity. The rented ids are never entered in any
+sequence's block table — they are an accounting charge, the actual bytes
+live in the device tables above.
+
+Faulting is demand-driven: the engine calls ``ensure`` with the step's
+adapter set before each batch; misses load from the registry (scale
+``alpha / rank`` folded into B at upload), evicting LRU adapters not
+protected by the current step. ``stats`` counts hits / misses / evictions /
+load bytes for the serving report and ``bench_lora.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_manager import BlockManager, OutOfBlocks
+from repro.core.lora.config import LoRAConfig
+from repro.core.lora.registry import (AdapterRegistry, adapter_nbytes,
+                                      lora_layer_sites)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot(tables, slot, payload):
+    """In-place slot write across the whole table pytree: ONE donated
+    dispatch per fault-in, O(adapter bytes) — an eager ``.at[].set`` would
+    copy every capacity-T leaf to write one slot (the PagedRunner mirror's
+    ``_write_blocks`` idiom)."""
+    return jax.tree.map(
+        lambda t, w: jax.lax.dynamic_update_slice_in_dim(t, w, slot, axis=1),
+        tables, payload)
+
+
+@dataclasses.dataclass
+class AdapterStoreStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    loads: int = 0
+    load_bytes: int = 0
+
+
+class PagedAdapterStore:
+    def __init__(self, model_cfg, lora: LoRAConfig, bm: BlockManager,
+                 kv_block_bytes: int,
+                 registry: Optional[AdapterRegistry] = None):
+        from repro.core.executor.state import next_pow2
+
+        self.cfg = model_cfg
+        self.lora = lora
+        self.bm = bm
+        self.registry = registry or AdapterRegistry(model_cfg, lora)
+        self.nbytes_per_adapter = adapter_nbytes(model_cfg, lora)
+        self.pages_per_adapter = max(
+            1, -(-self.nbytes_per_adapter // max(1, kv_block_bytes)))
+        if lora.pool_pages and lora.pool_pages < self.pages_per_adapter:
+            # fail at construction, not mid-serving: a cap below one
+            # adapter's rent can never be satisfied by any eviction
+            raise ValueError(
+                f"LoRAConfig.pool_pages={lora.pool_pages} cannot hold even "
+                f"one adapter ({self.pages_per_adapter} pages at rank "
+                f"{lora.rank})")
+        self.capacity = next_pow2(lora.max_loaded_adapters + 1)
+        self.stats = AdapterStoreStats()
+        self._slot_of: Dict[str, int] = {}
+        self._pages_of: Dict[str, List[int]] = {}
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
+        # exactly max_loaded_adapters usable slots — the pow2 capacity only
+        # pads the TABLE SHAPE (one jit variant), never the residency limit
+        self._free_slots: List[int] = list(
+            range(lora.max_loaded_adapters, 0, -1))
+        r = lora.rank
+        stages = []
+        for pattern, reps in model_cfg.stages:
+            layers = {}
+            for i, spec in enumerate(pattern):
+                layers[f"l{i}"] = {
+                    name: {"a": jnp.zeros((reps, self.capacity, din, r),
+                                          jnp.float32),
+                           "b": jnp.zeros((reps, self.capacity, r, dout),
+                                          jnp.float32)}
+                    for name, din, dout in lora_layer_sites(model_cfg, spec)}
+            stages.append(layers)
+        self.tables = tuple(stages)
+
+    # ------------------------------------------------------------------
+    @property
+    def loaded(self) -> List[str]:
+        return list(self._lru)
+
+    @property
+    def rented_pages(self) -> int:
+        return self.pages_per_adapter * len(self._slot_of)
+
+    def is_loaded(self, adapter_id: str) -> bool:
+        return adapter_id in self._slot_of
+
+    def slot(self, adapter_id: Optional[str]) -> int:
+        """Table slot for a (possibly absent) adapter; None -> null slot 0."""
+        return 0 if adapter_id is None else self._slot_of[adapter_id]
+
+    # ------------------------------------------------------------------
+    def ensure(self, adapter_ids: Iterable[str],
+               protected: Iterable[str] = ()) -> None:
+        """Fault the given adapters in; LRU-evict unprotected residents on
+        slot or page pressure. The requested set is implicitly protected —
+        one step's adapters can never evict each other. Raises
+        ``OutOfBlocks`` when the pool cannot fit the set even after
+        evicting everything evictable (the engine responds with its usual
+        pressure ladder: prefix-cache eviction, then preemption)."""
+        want = list(dict.fromkeys(adapter_ids))
+        keep = set(want) | set(protected)
+        for aid in want:
+            if aid in self._slot_of:
+                self.stats.hits += 1
+                self._lru.move_to_end(aid)
+            else:
+                self.stats.misses += 1
+                self._fault_in(aid, keep)
+
+    def _fault_in(self, adapter_id: str, keep) -> None:
+        weights = self.registry.get(adapter_id)
+        need = self.pages_per_adapter
+        while not self._free_slots or (
+                self.lora.pool_pages
+                and self.rented_pages + need > self.lora.pool_pages):
+            if not self.evict_one(keep):
+                raise OutOfBlocks(
+                    f"adapter store cannot fit {adapter_id!r}: "
+                    f"{len(self._slot_of)} resident, all protected")
+        while True:
+            try:
+                pages = self.bm.allocate(need)
+                break
+            except OutOfBlocks:
+                if not self.evict_one(keep):
+                    raise
+        slot = self._free_slots.pop()
+        self._upload(slot, weights)
+        self._slot_of[adapter_id] = slot
+        self._pages_of[adapter_id] = pages
+        self._lru[adapter_id] = None
+        self.stats.loads += 1
+        self.stats.load_bytes += self.nbytes_per_adapter
+
+    def _upload(self, slot: int, weights) -> None:
+        scale = self.lora.alpha / self.lora.rank
+        payload = tuple(
+            {lkey: {name: {
+                # payload leaves (R, 1, Din/rank, ...) slot into axis 1;
+                # the scale folds into B here so the hot path never sees it
+                "a": jnp.asarray(w["a"])[:, None],
+                "b": jnp.asarray(w["b"] * scale)[:, None]}
+                for name, w in sites.items()}
+             for lkey, sites in stage.items()}
+            for stage in weights)
+        self.tables = _write_slot(self.tables, jnp.asarray(slot, jnp.int32),
+                                  payload)
+
+    def evict_one(self, protected: Iterable[str] = ()) -> bool:
+        """Drop the least-recently-used unprotected adapter and return its
+        rented pages to the block pool. The freed slot's table bytes are
+        left as-is on purpose: ``marshal`` can only emit slots in
+        ``_slot_of`` (plus the null slot 0), and ``_upload`` fully
+        overwrites both planes before the slot is handed out again — so
+        zeroing here would rebuild the whole device table for a slot no
+        batch can address."""
+        protected = set(protected)
+        victim = next((aid for aid in self._lru if aid not in protected),
+                      None)
+        if victim is None:
+            return False
+        slot = self._slot_of.pop(victim)
+        self.bm.free(self._pages_of.pop(victim))
+        del self._lru[victim]
+        self._free_slots.append(slot)
+        self.stats.evictions += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def marshal(self, adapter_ids: List[Optional[str]]) -> dict:
+        """Per-row table slots + the device tables, the runners' lora
+        operand. Every id must already be resident (``ensure`` ran)."""
+        slots = np.asarray([self.slot(a) for a in adapter_ids], np.int32)
+        return {"ids": slots, "stages": self.tables}

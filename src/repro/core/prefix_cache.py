@@ -17,10 +17,17 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.block_manager import BlockManager
 
 
-def chain_hashes(tokens: List[int], block_size: int) -> List[Tuple[int, Tuple[int, ...]]]:
-    """Hash chain over *full* blocks only."""
+def chain_hashes(tokens: List[int], block_size: int,
+                 namespace=None) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Hash chain over *full* blocks only.
+
+    ``namespace`` seeds the chain: KV is only content-addressable by token
+    ids when the weights that produced it are identical, so requests bound
+    to different LoRA adapters (whose k/v projections carry per-tenant
+    deltas — docs/lora.md) hash into disjoint chains. None = base model,
+    which keeps the seed at 0."""
     out = []
-    h = 0
+    h = 0 if namespace is None else hash(("ns", namespace))
     for i in range(0, len(tokens) // block_size * block_size, block_size):
         blk = tuple(tokens[i: i + block_size])
         h = hash((h, blk))
@@ -55,8 +62,10 @@ class PrefixCache:
         self.stats = PrefixCacheStats()
 
     # ------------------------------------------------------------------
-    def lookup(self, tokens: List[int]) -> Tuple[List[int], List[int], int]:
-        """Longest cached prefix of ``tokens``.
+    def lookup(self, tokens: List[int],
+               namespace=None) -> Tuple[List[int], List[int], int]:
+        """Longest cached prefix of ``tokens`` (within ``namespace`` — the
+        request's LoRA adapter id, or None for the base model).
 
         Returns (device_block_ids_shared, host_hashes, matched_tokens). Device
         blocks come back with their refcount already incremented. ``host_hashes``
@@ -66,7 +75,7 @@ class PrefixCache:
         device_blocks: List[int] = []
         host_hashes: List[int] = []
         matched = 0
-        for h, _blk in chain_hashes(tokens, self.bm.block_size):
+        for h, _blk in chain_hashes(tokens, self.bm.block_size, namespace):
             if host_hashes:  # once we fall to host tier, stay there
                 if h in self._host:
                     self._host.move_to_end(h)
@@ -94,9 +103,11 @@ class PrefixCache:
         return self._host.get(h)
 
     # ------------------------------------------------------------------
-    def insert(self, tokens: List[int], block_table: List[int]) -> None:
+    def insert(self, tokens: List[int], block_table: List[int],
+               namespace=None) -> None:
         """Register a finished/prefilled sequence's full blocks for reuse."""
-        for i, (h, _blk) in enumerate(chain_hashes(tokens, self.bm.block_size)):
+        for i, (h, _blk) in enumerate(chain_hashes(tokens, self.bm.block_size,
+                                                   namespace)):
             if i >= len(block_table):
                 break
             if h in self._device:

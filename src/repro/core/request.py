@@ -24,6 +24,7 @@ class Request:
     priority: int = 0  # lower = more urgent (Andes-style urgency)
     user_id: str = "default"  # VTC fairness accounting
     extras: Optional[dict] = None  # modality-frontend stubs (audio frames etc.)
+    adapter_id: Optional[str] = None  # LoRA tenant (docs/lora.md); None = base model
 
 
 @dataclasses.dataclass

@@ -33,6 +33,12 @@ class SchedulerConfig:
     # so the SplitFuse budget must charge it that way or a spec step blows
     # past max_batched_tokens (k+1)x. 0 = speculation off.
     speculative_tokens: int = 0
+    # multi-tenant LoRA (docs/lora.md): max DISTINCT adapters one step may
+    # reference. Caps the adapter working set the store must keep resident
+    # for the batch (the engine clamps it to the device table capacity);
+    # sequences whose adapter would exceed it simply wait a step. 0 = no
+    # cap. Requests without an adapter never count.
+    max_adapters_per_batch: int = 0
 
 
 @dataclasses.dataclass
@@ -130,14 +136,35 @@ class Scheduler:
         slots = cfg.max_batch_slots
         key = self._order_key(now)
 
+        # adapter grouping (multi-tenant LoRA): one step references at most
+        # max_adapters_per_batch DISTINCT adapters; a sequence whose adapter
+        # would blow the cap is skipped this step (it stays runnable), so
+        # the batch groups around the adapters already admitted
+        adapters: set = set()
+
+        def adapter_fits(s: SeqState) -> bool:
+            aid = s.request.adapter_id
+            return (aid is None or aid in adapters
+                    or not cfg.max_adapters_per_batch
+                    or len(adapters) < cfg.max_adapters_per_batch)
+
+        def note_adapter(s: SeqState) -> None:
+            if s.request.adapter_id is not None:
+                adapters.add(s.request.adapter_id)
+
         # 1) decodes first — stall-free: every running decoded seq advances
         # a decoding seq's next input is its last generated token, at position
         # num_computed (== total_len - 1)
         decoding = sorted([s for s in self.running if not s.in_prefill], key=key)
         cost = 1 + cfg.speculative_tokens
-        for s in decoding[:slots]:
+        for s in decoding:
+            if slots <= 0:
+                break
             if cfg.speculative_tokens and budget < cost and decode_chunks:
                 break  # a speculating decode charges k+1 tokens of budget
+            if not adapter_fits(s):
+                continue
+            note_adapter(s)
             decode_chunks.append(ChunkWork(s, s.num_computed, 1))
             budget -= cost
             slots -= 1
@@ -161,6 +188,8 @@ class Scheduler:
         for s in prefilling:
             if slots <= 0 or budget <= 0:
                 break
+            if not adapter_fits(s):
+                continue
             want = min(s.remaining_prefill(), cfg.prefill_chunk, budget)
             if not cfg.enable_chunked_prefill:
                 # Orca-style: whole prompt or nothing
@@ -173,6 +202,7 @@ class Scheduler:
                 want = _pow2_floor(want)
             if want <= 0:
                 continue
+            note_adapter(s)
             chunks.append(ChunkWork(s, s.num_computed, want))
             budget -= want
             slots -= 1

@@ -1,0 +1,1 @@
+from repro.kernels.lora.ops import bgmv  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: batched grouped LoRA matmul (Punica BGMV, survey §VI).
+
+One grid step processes one batch row. The per-row adapter id is a
+*scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``, the same idiom
+the paged-attention kernel uses for block tables): the BlockSpec index_map
+turns ``idx[b]`` into the HBM->VMEM DMA source for that row's A/B slot, so
+a heterogeneous-adapter batch streams exactly the adapters it references —
+never the whole table — and the Pallas pipeline double-buffers the slot
+DMAs across rows for free. Both matmuls (shrink to rank R, expand to Dout)
+run in one VMEM residency of the row; the (C, R) intermediate never touches
+HBM. Slot 0 is the reserved null adapter (zeros): base-model rows compute a
+delta of exactly 0 through the same dispatch, which is what lets the
+runners batch adapter and non-adapter requests together.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, a_ref, b_ref, o_ref):
+    del idx_ref  # consumed by the index maps
+    x = x_ref[0].astype(jnp.float32)  # (C, Din)
+    a = a_ref[0].astype(jnp.float32)  # (Din, R)
+    b = b_ref[0].astype(jnp.float32)  # (R, Dout)
+    h = jax.lax.dot_general(x, a, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, R)
+    o_ref[0] = jax.lax.dot_general(h, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32
+                                   ).astype(o_ref.dtype)
+
+
+def bgmv(x, a, b, idx, *, interpret: bool = False):
+    """x: (B, C, Din); a: (T, Din, R); b: (T, R, Dout); idx: (B,) int32
+    -> (B, C, Dout). On real hardware R should be padded to the lane
+    minimum; correctness is validated in interpret mode on CPU."""
+    B, C, Din = x.shape
+    T, _, R = a.shape
+    Dout = b.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, C, Din), lambda i, idx: (i, 0, 0)),
+            pl.BlockSpec((1, Din, R), lambda i, idx: (idx[i], 0, 0)),
+            pl.BlockSpec((1, R, Dout), lambda i, idx: (idx[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, Dout), lambda i, idx: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, Dout), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, a, b)

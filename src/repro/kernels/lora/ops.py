@@ -1,0 +1,31 @@
+"""Jit'd entry point for the batched grouped LoRA matmul with backend
+dispatch — the same 3-impl pattern as ``flash_attention`` / ``kv_quant`` /
+``paged_attention``: 'pallas' on TPU, 'interpret' (Pallas-on-CPU
+validation), 'ref' (jnp oracle, the CPU serving default)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora.lora import bgmv as bgmv_pallas
+from repro.kernels.lora.ref import bgmv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def bgmv(x, a, b, idx, *, impl: str = "auto"):
+    """Batched grouped LoRA matmul: per-row ``y[b] = x[b] @ a[idx[b]] @
+    b[idx[b]]`` over stacked adapter tables.
+
+    x: (B, C, Din); a: (T, Din, R); b: (T, R, Dout); idx: (B,) any int
+    dtype -> (B, C, Dout) in x.dtype. Slot 0 of the tables is the null
+    adapter (zeros) by engine convention. The LoRA scale (alpha / rank) is
+    folded into the B table at load time (core/lora/store.py), not an
+    argument here."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    idx = idx.astype(jnp.int32)
+    if impl == "ref":
+        return bgmv_ref(x, a, b, idx)
+    return bgmv_pallas(x, a, b, idx, interpret=(impl == "interpret"))

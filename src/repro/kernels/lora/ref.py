@@ -1,0 +1,25 @@
+"""Pure-jnp reference for the batched grouped LoRA matmul (oracle for the
+Pallas kernel; the CPU serving path).
+
+Semantics (Punica's BGMV / S-LoRA's batched adapter matmul, survey §VI):
+every batch row carries its OWN adapter id — one dispatch computes
+
+    y[b] = (x[b] @ A[idx[b]]) @ B[idx[b]]
+
+over the whole heterogeneous batch. Adapter weights live in stacked tables
+``a (T, Din, R)`` / ``b (T, R, Dout)``; slot 0 is the engine's reserved
+NULL adapter (all zeros), so base-model rows ride the same dispatch with a
+delta of exactly 0 instead of branching the batch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bgmv_ref(x, a, b, idx):
+    """x: (B, C, Din); a: (T, Din, R); b: (T, R, Dout); idx: (B,) int32
+    -> (B, C, Dout) in x.dtype (f32 accumulation, like the kernel)."""
+    ag = jnp.take(a, idx, axis=0).astype(jnp.float32)  # (B, Din, R)
+    bg = jnp.take(b, idx, axis=0).astype(jnp.float32)  # (B, R, Dout)
+    h = jnp.einsum("bcd,bdr->bcr", x.astype(jnp.float32), ag)
+    return jnp.einsum("bcr,bro->bco", h, bg).astype(x.dtype)

@@ -47,7 +47,19 @@ def main():
                          "(0 = off). Pure global-attention models keep the "
                          "paged/speculative fast path on quantized pages "
                          "(docs/kv_quant.md)")
-    ap.add_argument("--debug", action="store_true", default=True)
+    ap.add_argument("--num-adapters", type=int, default=0,
+                    help="serve this many synthetic LoRA tenants (requests "
+                         "round-robin across them; 0 = multi-LoRA off, "
+                         "docs/lora.md)")
+    ap.add_argument("--lora-rank", type=int, default=8,
+                    help="LoRA adapter rank (with --num-adapters)")
+    ap.add_argument("--adapter-pool-pages", type=int, default=0,
+                    help="cap on KV-pool pages the adapter store may rent "
+                         "(0 = share the pool freely)")
+    # BooleanOptionalAction so --no-debug actually works (a store_true flag
+    # defaulting to True could never be switched off)
+    ap.add_argument("--debug", action=argparse.BooleanOptionalAction,
+                    default=True)
     args = ap.parse_args()
 
     cfg = configs.smoke_config(args.arch)
@@ -71,12 +83,18 @@ def main():
     from repro.core.kv_quant import QuantConfig
     kv_quant = QuantConfig(bits=args.kv_quant_bits) if args.kv_quant_bits \
         else None
+    from repro.core import LoRAConfig, make_adapter
+    lora = LoRAConfig(rank=args.lora_rank,
+                      pool_pages=args.adapter_pool_pages) \
+        if args.num_adapters else None
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
         execution_backend=args.backend, speculative=speculative,
-        kv_quant=kv_quant,
+        kv_quant=kv_quant, lora=lora,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
+    for a in range(args.num_adapters):
+        engine.register_adapter(f"a{a}", make_adapter(cfg, lora, seed=a + 1))
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -85,6 +103,8 @@ def main():
             prompt=list(map(int, rng.integers(2, cfg.vocab_size,
                                               size=int(rng.integers(8, 64))))),
             user_id=f"u{i % 2}",
+            adapter_id=(f"a{i % args.num_adapters}"
+                        if args.num_adapters else None),
             sampling=SamplingParams(temperature=0.7, top_k=50,
                                     max_new_tokens=16)))
     metrics = engine.run()
@@ -101,11 +121,18 @@ def main():
     if kv_quant is not None and engine.store.quantized:
         quant = (f", kv_quant={kv_quant.bits}bit "
                  f"({engine.store.kv_fp16_bytes_per_block() / engine.store.kv_bytes_per_block():.2f}x capacity vs fp16)")
+    mlora = ""
+    if engine.adapters is not None:
+        st = engine.adapters.stats
+        mlora = (f", lora={args.num_adapters} adapters r{lora.rank} "
+                 f"(hits={st.hits} misses={st.misses} evicts={st.evictions}, "
+                 f"{engine.adapters.rented_pages} pages rented)")
     print(f"{args.arch}: {len(metrics)} requests, {gen} tokens, "
           f"{gen/dt:.1f} tok/s, {engine.steps} steps "
           f"({engine.paged_steps} paged), "
           f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
-          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms{spec}{quant}")
+          f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms"
+          f"{spec}{quant}{mlora}")
 
 
 if __name__ == "__main__":

@@ -306,11 +306,37 @@ def decode_attention_cp(q, k_cache, v_cache, total_len, *, axes, mesh,
 # full attention layer (projections + rope + flash / decode)
 # ---------------------------------------------------------------------------
 
-def _qkv(p, cfg, x):
+def _qkv(p, cfg, x, lora=None, lora_ids=None, impl: str = "auto"):
     q = proj_qkv(p["wq"], x, cfg.num_heads, cfg.head_dim)
     k = proj_qkv(p["wk"], x, cfg.num_kv_heads, cfg.head_dim)
     v = proj_qkv(p["wv"], x, cfg.num_kv_heads, cfg.head_dim)
+    if lora is not None:
+        # per-row adapter deltas (multi-tenant LoRA, docs/lora.md): one
+        # batched grouped matmul per projection over the step's adapter
+        # table; rows with no adapter hit the zeroed null slot
+        from repro.kernels.lora import bgmv
+
+        B, C, _ = x.shape
+        q = q + bgmv(x, lora["wq"]["a"], lora["wq"]["b"], lora_ids,
+                     impl=impl).reshape(B, C, cfg.num_heads, cfg.head_dim)
+        k = k + bgmv(x, lora["wk"]["a"], lora["wk"]["b"], lora_ids,
+                     impl=impl).reshape(B, C, cfg.num_kv_heads, cfg.head_dim)
+        v = v + bgmv(x, lora["wv"]["a"], lora["wv"]["b"], lora_ids,
+                     impl=impl).reshape(B, C, cfg.num_kv_heads, cfg.head_dim)
     return q, k, v
+
+
+def proj_out_lora(p_wo, x, lora=None, lora_ids=None, impl: str = "auto"):
+    """``proj_out`` plus the per-row ``wo`` adapter delta (input is the
+    pre-projection head layout (B, C, H, hd), flattened for the adapter)."""
+    out = proj_out(p_wo, x)
+    if lora is not None:
+        from repro.kernels.lora import bgmv
+
+        B, C, H, hd = x.shape
+        out = out + bgmv(x.reshape(B, C, H * hd), lora["wo"]["a"],
+                         lora["wo"]["b"], lora_ids, impl=impl)
+    return out
 
 
 def _maybe_rope(cfg, spec, q, k, positions):
@@ -405,7 +431,7 @@ def quantized_pages(pages) -> bool:
 
 
 def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
-                      impl: str = "auto"):
+                      lora=None, lora_ids=None, impl: str = "auto"):
     """C-token scoring against KIVI-quantized page stores (survey §III.C).
 
     Pages hold uint8 codes + per-page scale/zero planes for every FILLED
@@ -433,7 +459,7 @@ def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
     from repro.kernels.paged_attention import paged_attend_extend_quant
 
     B, C, _ = x.shape
-    q, k, v = _qkv(p, cfg, x)
+    q, k, v = _qkv(p, cfg, x, lora=lora, lora_ids=lora_ids, impl=impl)
     pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)
     use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
     if use_rope:
@@ -454,12 +480,12 @@ def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
     out = paged_attend_extend_quant(
         q, pages["k"], pages["v"], k_tail, v_tail, block_tables, lengths,
         tail_start, scale=scale, deq_dtype=cfg.dtype, impl=impl)
-    out = proj_out(p["wo"], out)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
     return out, pages, (k_new, v_new)
 
 
 def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
-                      impl: str = "auto"):
+                      lora=None, lora_ids=None, impl: str = "auto"):
     """One-token decode directly against block-indexed page stores.
 
     x: (B, 1, d); pages: {"k","v"}: (KV, NB, P, D) — the engine's physical
@@ -483,9 +509,10 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     B = x.shape[0]
     if quantized_pages(pages):
         out, pages, (k_new, v_new) = _attn_chunk_quant(
-            p, cfg, spec, x, pages, block_tables, lengths, impl=impl)
+            p, cfg, spec, x, pages, block_tables, lengths, lora=lora,
+            lora_ids=lora_ids, impl=impl)
         return out, pages, (k_new[:, 0], v_new[:, 0])
-    q, k, v = _qkv(p, cfg, x)
+    q, k, v = _qkv(p, cfg, x, lora=lora, lora_ids=lora_ids, impl=impl)
     pos = lengths.astype(jnp.int32)
     use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
     if use_rope:
@@ -501,13 +528,13 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
     out = paged_attend(q, k_pages, v_pages, block_tables, pos + 1,
                        scale=scale, impl=impl)
-    out = proj_out(p["wo"], out)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
 def attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
                       chunk_lens=None, scratch_block=None,
-                      impl: str = "auto"):
+                      lora=None, lora_ids=None, impl: str = "auto"):
     """Multi-token extend directly against block-indexed page stores — the
     paged twin of ``_attn_extend``'s gathered-window chunk attention.
 
@@ -543,9 +570,10 @@ def attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
 
     if quantized_pages(pages):
         return _attn_chunk_quant(p, cfg, spec, x, pages, block_tables,
-                                 lengths, impl=impl)
+                                 lengths, lora=lora, lora_ids=lora_ids,
+                                 impl=impl)
     B, C, _ = x.shape
-    q, k, v = _qkv(p, cfg, x)
+    q, k, v = _qkv(p, cfg, x, lora=lora, lora_ids=lora_ids, impl=impl)
     pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)
     use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
     if use_rope:
@@ -568,16 +596,16 @@ def attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
     out = paged_attend_extend(q, k_pages, v_pages, block_tables, lengths,
                               scale=scale, impl=impl)
-    out = proj_out(p["wo"], out)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
 def attn_verify_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
-                      impl: str = "auto"):
+                      lora=None, lora_ids=None, impl: str = "auto"):
     """Speculative verify: C-token scoring on paged KV — ``attn_extend_paged``
     with every position real (uniform k+1 chunks need no ragged padding)."""
     return attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths,
-                             impl=impl)
+                             lora=lora, lora_ids=lora_ids, impl=impl)
 
 
 def init_attn_cache(cfg, batch, max_seq, dtype):

@@ -64,15 +64,22 @@ def make_mlp_params(key, cfg, dtype):
     }
 
 
-def mlp_apply(p, cfg, x):
+def mlp_apply(p, cfg, x, lora=None, lora_ids=None, impl: str = "auto"):
     h = dense(p["w1"], x)
+    if lora is not None and "w1" in lora:
+        from repro.kernels.lora import bgmv
+        h = h + bgmv(x, lora["w1"]["a"], lora["w1"]["b"], lora_ids, impl=impl)
     h = lconstraint(h, ("batch", None, "ff"))
     if is_glu(cfg.activation):
         u, g = jnp.split(h, 2, axis=-1)
         h = glu_inner_act(cfg.activation)(g) * u
     else:
         h = glu_inner_act(cfg.activation)(h)
-    return dense(p["w2"], h)
+    y = dense(p["w2"], h)
+    if lora is not None and "w2" in lora:
+        from repro.kernels.lora import bgmv
+        y = y + bgmv(h, lora["w2"]["a"], lora["w2"]["b"], lora_ids, impl=impl)
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -121,12 +128,14 @@ def _cross_attend(p, cfg, x, enc_k, enc_v):
     return attn.proj_out(p["wo"], out)
 
 
-def _ff_branch(p, spec, cfg, x, cf: float = 1.25):
+def _ff_branch(p, spec, cfg, x, cf: float = 1.25, lora=None, lora_ids=None,
+               impl: str = "auto"):
     if spec.ff == "none":
         return x, 0.0
     h = apply_norm(cfg.norm, p["norm2"], x)
     if spec.ff == "mlp":
-        return x + mlp_apply(p["ff"], cfg, h), 0.0
+        return x + mlp_apply(p["ff"], cfg, h, lora=lora, lora_ids=lora_ids,
+                             impl=impl), 0.0
     y, aux = moe_mod.moe_apply(p["ff"], cfg, h, capacity_factor=cf)
     return x + y, aux
 
@@ -151,10 +160,10 @@ def _layer_forward(p, spec, cfg, x, positions, *, enc_kv=None, kv_valid=None):
     return _ff_branch(p, spec, cfg, x)
 
 
-def _attn_extend(p, cfg, spec, x, cache, cache_len):
+def _attn_extend(p, cfg, spec, x, cache, cache_len, lora=None, lora_ids=None):
     """Write a chunk of new KV at [cache_len, cache_len+C) and attend."""
     B, C, _ = x.shape
-    q, k, v = attn._qkv(p, cfg, x)
+    q, k, v = attn._qkv(p, cfg, x, lora=lora, lora_ids=lora_ids)
     pos = cache_len[:, None] + jnp.arange(C)[None, :]  # (B,C)
     use_rope = cfg.use_rope and not (cfg.nope_on_global and spec.attn_kind == "global")
     if use_rope:
@@ -172,7 +181,7 @@ def _attn_extend(p, cfg, spec, x, cache, cache_len):
         q, k_cache, v_cache, q_pos=pos, k_pos=kpos, kind=spec.attn_kind,
         window=cfg.sliding_window, chunk=cfg.chunk_size, scale=scale,
         causal=True, kv_valid=kv_valid)
-    out = attn.proj_out(p["wo"], out)
+    out = attn.proj_out_lora(p["wo"], out, lora, lora_ids)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -207,10 +216,12 @@ def _mla_extend(p, cfg, spec, x, cache, cache_len):
     return out, {"c_kv": c_cache, "k_pe": pe_cache}
 
 
-def _layer_extend(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
+def _layer_extend(p, spec, cfg, x, cache, cache_len, *, enc_kv=None,
+                  lora=None, lora_ids=None):
     h = apply_norm(cfg.norm, p["norm1"], x)
     if spec.mixer == "attn":
-        y, new_cache = _attn_extend(p["mixer"], cfg, spec, h, cache, cache_len)
+        y, new_cache = _attn_extend(p["mixer"], cfg, spec, h, cache, cache_len,
+                                    lora=lora, lora_ids=lora_ids)
     elif spec.mixer == "mla":
         y, new_cache = _mla_extend(p["mixer"], cfg, spec, h, cache, cache_len)
     elif spec.mixer == "mamba":
@@ -230,7 +241,7 @@ def _layer_extend(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
         x = x + _cross_attend(p["cross"], cfg, hc, *enc_kv)
     # inference uses a generous capacity factor (survey §VI.B "dynamic gating":
     # over-provision rather than drop tokens at serve time)
-    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0, lora=lora, lora_ids=lora_ids)
     return x, new_cache
 
 
@@ -265,28 +276,32 @@ def _layer_decode(p, spec, cfg, x, cache, cache_len, *, enc_kv=None):
 
 
 def _layer_decode_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
-                        impl: str = "auto"):
+                        lora=None, lora_ids=None, impl: str = "auto"):
     """One-token decode with attention running directly on page stores."""
     h = apply_norm(cfg.norm, p["norm1"], x)
     y, new_pages, kv_new = attn.attn_decode_paged(
-        p["mixer"], cfg, spec, h, pages, block_tables, lengths, impl=impl)
+        p["mixer"], cfg, spec, h, pages, block_tables, lengths, lora=lora,
+        lora_ids=lora_ids, impl=impl)
     x = x + y
-    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0, lora=lora, lora_ids=lora_ids,
+                      impl=impl)
     return x, new_pages, kv_new
 
 
 def _layer_extend_paged(p, spec, cfg, x, pages, block_tables, lengths, *,
                         chunk_lens=None, scratch_block=None,
-                        impl: str = "auto"):
+                        lora=None, lora_ids=None, impl: str = "auto"):
     """C-token extend/scoring with attention running directly on page
     stores; ``chunk_lens``/``scratch_block`` handle ragged chunk batches
     (see ``attn_extend_paged``)."""
     h = apply_norm(cfg.norm, p["norm1"], x)
     y, new_pages, kv_new = attn.attn_extend_paged(
         p["mixer"], cfg, spec, h, pages, block_tables, lengths,
-        chunk_lens=chunk_lens, scratch_block=scratch_block, impl=impl)
+        chunk_lens=chunk_lens, scratch_block=scratch_block, lora=lora,
+        lora_ids=lora_ids, impl=impl)
     x = x + y
-    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0)
+    x, _ = _ff_branch(p, spec, cfg, x, cf=2.0, lora=lora, lora_ids=lora_ids,
+                      impl=impl)
     return x, new_pages, kv_new
 
 
@@ -559,8 +574,15 @@ def build_model(cfg: ModelConfig) -> Model:
         return cache
 
     # ---------------- extend (prefill / chunked prefill) ---------------------
-    def extend(params, tokens, cache, cache_len, *, batch=None):
-        """tokens: (B, C). cache_len: (B,). Returns (logits (B,C,V), new_cache)."""
+    def extend(params, tokens, cache, cache_len, *, batch=None, lora=None):
+        """tokens: (B, C). cache_len: (B,). Returns (logits (B,C,V), new_cache).
+
+        ``lora``: optional multi-tenant adapter operand (docs/lora.md) —
+        {"ids": (B,) adapter-table slots, "stages": per-stage site tables
+        with stacked (R, T, ...) leaves that ride the layer scan exactly
+        like the params}. Gathered serving of a heterogeneous-adapter
+        batch; lora and enc-dec (audio) are mutually exclusive because the
+        adapter sites require a pure-attention stack."""
         extras = batch or {}
         if cfg.family == "vlm" and "vision_embeds" in extras:
             x = splice_vision(params, tokens, extras["vision_embeds"])
@@ -576,28 +598,41 @@ def build_model(cfg: ModelConfig) -> Model:
             x = x + jnp.take(params["pos_embed"], jnp.clip(pos, 0, size - 1),
                              axis=0).astype(dtype)
         x = lconstraint(x, ("batch", None, "embed"))
+        lora_ids = None if lora is None else lora["ids"]
         new_stages = []
         for si, (pattern, reps) in enumerate(cfg.stages):
             stage_p = params["stages"][si]
             stage_c = cache["stages"][si]
             cross_c = cache["cross"][si] if cross and "cross" in cache else None
+            stage_l = None if lora is None else lora["stages"][si]
+            assert cross_c is None or stage_l is None, \
+                "LoRA adapters need a pure-attention stack (no enc-dec)"
 
             def body(carry, xs):
                 h = carry
-                if cross_c is None:
-                    p_r, c_r = xs
-                    ekv = None
-                else:
+                l_r = None
+                if cross_c is not None:
                     p_r, c_r, x_r = xs
+                elif stage_l is not None:
+                    p_r, c_r, l_r = xs
+                else:
+                    p_r, c_r = xs
                 new_c = {}
                 for i, spec in enumerate(pattern):
                     e = None if cross_c is None else (x_r[f"l{i}"]["k"], x_r[f"l{i}"]["v"])
                     h, nc = _layer_extend(p_r[f"l{i}"], spec, cfg, h, c_r[f"l{i}"],
-                                          cache_len, enc_kv=e)
+                                          cache_len, enc_kv=e,
+                                          lora=None if l_r is None else l_r[f"l{i}"],
+                                          lora_ids=lora_ids)
                     new_c[f"l{i}"] = nc
                 return h, new_c
 
-            xs = (stage_p, stage_c) if cross_c is None else (stage_p, stage_c, cross_c)
+            if cross_c is not None:
+                xs = (stage_p, stage_c, cross_c)
+            elif stage_l is not None:
+                xs = (stage_p, stage_c, stage_l)
+            else:
+                xs = (stage_p, stage_c)
             x, new_stage_c = jax.lax.scan(body, x, xs)
             new_stages.append(new_stage_c)
         logits = head(params, x)
@@ -668,7 +703,7 @@ def build_model(cfg: ModelConfig) -> Model:
 
     # ---------------- decode_paged (one token, no gathered window) ------------
     def decode_paged(params, tokens, pages, block_tables, lengths, *,
-                     impl: str = "auto"):
+                     lora=None, impl: str = "auto"):
         """tokens: (B, 1); pages: tuple over stages of
         {"r{r}": {"l{i}": {"k","v"}}} with leaves (KV, NB, P, D) — the
         engine's physical page stores in kernel layout; block_tables:
@@ -681,13 +716,15 @@ def build_model(cfg: ModelConfig) -> Model:
         a scanned page store would be threaded xs->ys and copied whole every
         step (see init_cache). Returns (logits, new_pages, kv_writes) where
         kv_writes mirrors pages with leaves (B, KV, D): the new token's K/V,
-        for the host-authoritative store writeback."""
+        for the host-authoritative store writeback. ``lora``: per-row
+        adapter operand, as in ``extend``."""
         x = embed_tokens(params, tokens)
         if cfg.learned_positions:
             size = params["pos_embed"].shape[0]
             pos = jnp.clip(lengths, 0, size - 1)
             x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(dtype)
         x = lconstraint(x, ("batch", None, "embed"))
+        lora_ids = None if lora is None else lora["ids"]
         new_stages = []
         writes = []
         for si, (pattern, reps) in enumerate(cfg.stages):
@@ -696,13 +733,16 @@ def build_model(cfg: ModelConfig) -> Model:
             w_stage = {}
             for r in range(reps):
                 p_r = jax.tree.map(lambda a: a[r], stage_p)
+                l_r = None if lora is None else \
+                    jax.tree.map(lambda a: a[r], lora["stages"][si])
                 new_c = {}
                 w_c = {}
                 for i, spec in enumerate(pattern):
                     x, nc, kv_new = _layer_decode_paged(
                         p_r[f"l{i}"], spec, cfg, x,
                         pages[si][f"r{r}"][f"l{i}"], block_tables, lengths,
-                        impl=impl)
+                        lora=None if l_r is None else l_r[f"l{i}"],
+                        lora_ids=lora_ids, impl=impl)
                     new_c[f"l{i}"] = nc
                     w_c[f"l{i}"] = {"k": kv_new[0], "v": kv_new[1]}
                 new_stage[f"r{r}"] = new_c
@@ -715,7 +755,7 @@ def build_model(cfg: ModelConfig) -> Model:
     # ---------------- extend_paged (C-token chunks, no gathered window) -------
     def extend_paged(params, tokens, pages, block_tables, lengths,
                      chunk_lens=None, scratch_block=None, *,
-                     impl: str = "auto"):
+                     lora=None, impl: str = "auto"):
         """Append/score a chunk of C tokens per sequence straight off the
         page stores — paged chunked prefill (survey §III.A/§IV.A), the
         paged twin of ``extend``.
@@ -739,6 +779,7 @@ def build_model(cfg: ModelConfig) -> Model:
             pos = jnp.clip(lengths[:, None] + jnp.arange(C), 0, size - 1)
             x = x + jnp.take(params["pos_embed"], pos, axis=0).astype(dtype)
         x = lconstraint(x, ("batch", None, "embed"))
+        lora_ids = None if lora is None else lora["ids"]
         new_stages = []
         writes = []
         for si, (pattern, reps) in enumerate(cfg.stages):
@@ -747,6 +788,8 @@ def build_model(cfg: ModelConfig) -> Model:
             w_stage = {}
             for r in range(reps):
                 p_r = jax.tree.map(lambda a: a[r], stage_p)
+                l_r = None if lora is None else \
+                    jax.tree.map(lambda a: a[r], lora["stages"][si])
                 new_c = {}
                 w_c = {}
                 for i, spec in enumerate(pattern):
@@ -754,7 +797,8 @@ def build_model(cfg: ModelConfig) -> Model:
                         p_r[f"l{i}"], spec, cfg, x,
                         pages[si][f"r{r}"][f"l{i}"], block_tables, lengths,
                         chunk_lens=chunk_lens, scratch_block=scratch_block,
-                        impl=impl)
+                        lora=None if l_r is None else l_r[f"l{i}"],
+                        lora_ids=lora_ids, impl=impl)
                     new_c[f"l{i}"] = nc
                     w_c[f"l{i}"] = {"k": kv_new[0], "v": kv_new[1]}
                 new_stage[f"r{r}"] = new_c
@@ -766,14 +810,14 @@ def build_model(cfg: ModelConfig) -> Model:
 
     # ---------------- verify_paged (C tokens, no gathered window) -------------
     def verify_paged(params, tokens, pages, block_tables, lengths, *,
-                     impl: str = "auto"):
+                     lora=None, impl: str = "auto"):
         """Score C tokens per sequence straight off the page stores: the
         speculative verify step (target scores the k drafts + 1 bonus
         position in one forward) and the draft's paged catch-up. Exactly
         ``extend_paged`` with every position real (uniform chunks need no
         ragged padding); ``decode_paged`` is the C == 1 case."""
         return extend_paged(params, tokens, pages, block_tables, lengths,
-                            impl=impl)
+                            lora=lora, impl=impl)
 
     paged_ok = paged_decode_supported(cfg)
     return Model(cfg=cfg, init=init, forward=forward, extend=extend, decode=decode,

@@ -23,6 +23,7 @@ BENCH_MODULES = [
     "bench_disagg",
     "bench_kernels",
     "bench_kv_quant",
+    "bench_lora",
     "bench_moe",
     "bench_paging",
     "bench_prefix_cache",

@@ -408,6 +408,38 @@ def test_cross_backend_determinism(olmo):
         assert run(b) == streams[b], f"{b} not reproducible"
 
 
+def test_cross_backend_determinism_mixed_adapters(olmo):
+    """The multi-tenant twin of the test above (docs/lora.md): a batch
+    mixing three LoRA tenants with a base-model request must emit
+    identical greedy streams on the gathered, paged and speculative
+    backends — the gathered path scans the adapter tables with the layer
+    scan, paged/speculative index them per repeat, and the speculative
+    draft proposes WITH the adapter deltas (self-speculation)."""
+    from repro.core import LoRAConfig, make_adapter
+    cfg, m, params = olmo
+    lc = LoRAConfig(rank=4, alpha=8.0, max_loaded_adapters=4)
+    adapters = {f"a{j}": make_adapter(cfg, lc, seed=j + 1) for j in range(3)}
+    prompts = _prompts(rng=np.random.default_rng(51), cfg=cfg)
+    aids = ["a0", "a1", None, "a2"]
+
+    def run(backend):
+        eng = LLMEngine(m, params, _cfg(backend=backend, lora=lc))
+        for aid, w in adapters.items():
+            eng.register_adapter(aid, w)
+        for i, (p, a) in enumerate(zip(prompts, aids)):
+            eng.add_request(Request(request_id=f"r{i}", prompt=p,
+                                    adapter_id=a,
+                                    sampling=SamplingParams(max_new_tokens=6)))
+        eng.run()
+        if backend != "gathered":
+            assert eng.host_copy_bytes == 0
+        return {f"r{i}": eng.seqs[f"r{i}"].generated
+                for i in range(len(prompts))}
+
+    streams = {b: run(b) for b in ("gathered", "paged", "speculative")}
+    assert streams["gathered"] == streams["paged"] == streams["speculative"]
+
+
 def test_host_copy_counter_tracks_gathered_traffic(olmo):
     cfg, m, params = olmo
     r = np.random.default_rng(13)

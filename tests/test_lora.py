@@ -1,0 +1,427 @@
+"""Multi-tenant LoRA serving (docs/lora.md): batched multi-adapter decode
+must be exactly the dense-merged single-tenant outputs on every backend,
+the paged adapter store must rent real BlockManager pages (one memory
+budget with the KV cache) and LRU-page adapters under pressure, and the
+fleet must route by adapter affinity and keep adapter bindings across live
+migration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (EngineConfig, LLMEngine, LoRAConfig, Request,
+                        SamplingParams, make_adapter, merge_adapter)
+from repro.core.block_manager import BlockManager, OutOfBlocks
+from repro.core.fleet import ServingFleet
+from repro.core.lora import PagedAdapterStore, adapter_nbytes
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = configs.smoke_config("olmo-1b")
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+    return cfg, m, params
+
+
+LC = LoRAConfig(rank=4, alpha=8.0, max_loaded_adapters=4)
+
+
+def _cfg(backend="auto", lora=LC, **kw):
+    base = dict(block_size=8, num_blocks=256, num_state_slots=16,
+                max_model_len=128, execution_backend=backend, lora=lora,
+                enable_prefix_cache=False,
+                scheduler=SchedulerConfig(max_batch_slots=4,
+                                          max_batched_tokens=48,
+                                          prefill_chunk=16))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _adapters(cfg, n=2, lora=LC):
+    return {f"a{j}": make_adapter(cfg, lora, seed=j + 1) for j in range(n)}
+
+
+def _prompts(cfg, rng, n=4):
+    return [list(map(int, rng.integers(2, cfg.vocab_size,
+                                       size=int(rng.integers(10, 40)))))
+            for _ in range(n)]
+
+
+def _drive(m, params, ecfg, prompts, aids, adapters, max_new=6):
+    eng = LLMEngine(m, params, ecfg)
+    for aid, w in adapters.items():
+        eng.register_adapter(aid, w)
+    for i, (p, a) in enumerate(zip(prompts, aids)):
+        eng.add_request(Request(request_id=f"r{i}", prompt=p, adapter_id=a,
+                                sampling=SamplingParams(max_new_tokens=max_new)))
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# kernel: batched grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_bgmv_matches_dense(impl):
+    from repro.kernels.lora import bgmv
+    r = np.random.default_rng(0)
+    B, C, Din, R, Dout, T = 5, 3, 16, 4, 24, 4
+    x = jnp.asarray(r.standard_normal((B, C, Din)), jnp.float32)
+    a = jnp.asarray(r.standard_normal((T, Din, R)), jnp.float32).at[0].set(0)
+    b = jnp.asarray(r.standard_normal((T, R, Dout)), jnp.float32).at[0].set(0)
+    idx = jnp.asarray([0, 2, 1, 3, 2], jnp.int32)
+    y = np.asarray(bgmv(x, a, b, idx, impl=impl))
+    for row in range(B):
+        want = np.einsum("cd,dr,ro->co", np.asarray(x[row]),
+                         np.asarray(a[idx[row]]), np.asarray(b[idx[row]]))
+        np.testing.assert_allclose(y[row], want, atol=1e-4, rtol=1e-4)
+    assert np.abs(y[0]).max() == 0.0  # null slot 0 = exact zero delta
+
+
+def test_bgmv_ref_interpret_bitwise():
+    """The jnp oracle and the Pallas kernel (interpret) must agree exactly
+    — the cross-impl token-parity anchor."""
+    from repro.kernels.lora import bgmv
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.standard_normal((4, 2, 32)), jnp.float32)
+    a = jnp.asarray(r.standard_normal((2, 32, 8)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((2, 8, 16)), jnp.float32)
+    idx = jnp.asarray([0, 1, 1, 0], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(bgmv(x, a, b, idx, impl="ref")),
+        np.asarray(bgmv(x, a, b, idx, impl="interpret")))
+
+
+# ---------------------------------------------------------------------------
+# paged adapter store: one memory budget with the KV cache
+# ---------------------------------------------------------------------------
+
+def test_store_rents_pool_pages_and_lru_evicts(olmo):
+    """Satellite: BlockManager.used_blocks must count rented adapter pages
+    (the fleet load signal and preemption pressure see resident adapters)."""
+    cfg, m, params = olmo
+    bm = BlockManager(64, 8)
+    st = PagedAdapterStore(cfg, LoRAConfig(rank=4, max_loaded_adapters=2),
+                           bm, kv_block_bytes=adapter_nbytes(cfg, LC) // 4)
+    for j in range(3):
+        st.registry.register(f"a{j}", make_adapter(cfg, LC, seed=j + 1))
+    assert bm.used_blocks == 0
+    st.ensure(["a0", "a1"])
+    assert bm.used_blocks == st.rented_pages == 2 * st.pages_per_adapter
+    assert st.pages_per_adapter >= 4
+    st.ensure(["a2"])  # LRU evicts a0, pages returned and re-rented
+    assert not st.is_loaded("a0") and st.is_loaded("a2")
+    assert bm.used_blocks == 2 * st.pages_per_adapter
+    assert st.stats.evictions == 1 and st.stats.misses == 3
+    st.ensure(["a2"])
+    assert st.stats.hits == 1
+    # protected adapters are never evicted: a2+a1 resident, both protected
+    with pytest.raises(OutOfBlocks):
+        st.ensure(["a0"], protected=["a1", "a2"])
+
+
+def test_store_pool_pages_cap(olmo):
+    cfg, m, params = olmo
+    bm = BlockManager(256, 8)
+    nb = adapter_nbytes(cfg, LC)
+    st = PagedAdapterStore(
+        cfg, LoRAConfig(rank=4, max_loaded_adapters=4,
+                        pool_pages=2 * (nb // (nb // 4))),
+        bm, kv_block_bytes=nb // 4)
+    for j in range(3):
+        st.registry.register(f"a{j}", make_adapter(cfg, LC, seed=j + 1))
+    st.ensure(["a0", "a1"])  # exactly at the cap
+    st.ensure(["a2"])  # must evict despite free slots/pool blocks
+    assert st.stats.evictions == 1
+    assert st.rented_pages <= st.lora.pool_pages
+
+
+def test_pool_cap_below_one_adapter_rejected(olmo):
+    """A pool cap that cannot hold even one adapter's rent can never be
+    satisfied by eviction — must fail at construction, not mid-serving."""
+    cfg, m, params = olmo
+    nb = adapter_nbytes(cfg, LC)
+    with pytest.raises(ValueError):
+        PagedAdapterStore(cfg, LoRAConfig(rank=4, pool_pages=1),
+                          BlockManager(64, 8), kv_block_bytes=nb // 4)
+
+
+def test_pool_cap_clamps_per_batch_adapters(olmo):
+    """With pool_pages sized for exactly one resident adapter, the engine
+    must clamp the scheduler's per-step adapter cap so a multi-tenant
+    workload serializes tenant groups instead of walking the pressure
+    ladder destructively and crashing — and outputs still match a roomy
+    run."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg, n=3)
+    prompts = _prompts(cfg, np.random.default_rng(31))
+    aids = ["a0", "a1", "a2", "a1"]
+    roomy = _drive(m, params, _cfg(), prompts, aids, adapters)
+    probe = LLMEngine(m, params, _cfg())  # learn the per-adapter rent
+    ppa = probe.adapters.pages_per_adapter
+    lc = LoRAConfig(rank=4, alpha=8.0, max_loaded_adapters=4,
+                    pool_pages=ppa)
+    eng = _drive(m, params, _cfg(lora=lc), prompts, aids, adapters)
+    assert eng.scheduler.cfg.max_adapters_per_batch == 1
+    assert eng.adapters.rented_pages <= ppa
+    assert eng.adapters.stats.evictions >= 2  # tenants rotated through
+    for i in range(len(prompts)):
+        assert roomy.seqs[f"r{i}"].generated == \
+            eng.seqs[f"r{i}"].generated, i
+
+
+def test_marshal_null_slot_for_base_requests(olmo):
+    cfg, m, params = olmo
+    bm = BlockManager(64, 8)
+    st = PagedAdapterStore(cfg, LC, bm, kv_block_bytes=1 << 20)
+    st.registry.register("a0", make_adapter(cfg, LC, seed=1))
+    st.ensure(["a0"])
+    mar = st.marshal([None, "a0", None])
+    assert mar["ids"].tolist() == [0, st.slot("a0"), 0]
+
+
+def test_unregistered_adapter_raises(olmo):
+    cfg, m, params = olmo
+    eng = LLMEngine(m, params, _cfg())
+    eng.add_request(Request(request_id="r0", prompt=[3, 4, 5, 6],
+                            adapter_id="ghost",
+                            sampling=SamplingParams(max_new_tokens=2)))
+    with pytest.raises(KeyError):
+        eng.run()
+
+
+def test_adapter_request_on_non_lora_engine_rejected(olmo):
+    """An adapter-bound request on an engine without EngineConfig.lora
+    must be refused loudly — silently serving the tenant base weights is
+    a wrong-output failure nothing would surface. Same for migration."""
+    cfg, m, params = olmo
+    eng = LLMEngine(m, params, _cfg(lora=None))
+    with pytest.raises(ValueError):
+        eng.add_request(Request(request_id="r0", prompt=[3, 4, 5],
+                                adapter_id="a0",
+                                sampling=SamplingParams(max_new_tokens=2)))
+    with pytest.raises(ValueError):
+        eng.import_seq({"request": Request(request_id="r1", prompt=[3],
+                                           adapter_id="a0")})
+
+
+def test_lora_requires_paged_capable_stack():
+    cfg = configs.smoke_config("starcoder2-3b")  # window attention
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+    with pytest.raises(ValueError):
+        LLMEngine(m, params, _cfg(backend="gathered"))
+
+
+# ---------------------------------------------------------------------------
+# engine: mixed-adapter batches, exact single-tenant outputs
+# ---------------------------------------------------------------------------
+
+def test_mixed_adapter_batch_matches_dense_merged(olmo):
+    """The acceptance anchor: a heterogeneous-adapter batch emits, per
+    request, exactly what a dense-merged single-tenant engine emits."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(3))
+    aids = ["a0", "a1", None, "a0"]
+    eng = _drive(m, params, _cfg(backend="auto"), prompts, aids, adapters)
+    assert eng.paged_steps == eng.steps and eng.host_copy_bytes == 0
+    assert eng.adapters.stats.misses == 2  # both tenants faulted in once
+    for aid in ("a0", "a1", None):
+        pm = merge_adapter(params, adapters[aid], cfg, LC) if aid else params
+        ref = LLMEngine(m, pm, _cfg(lora=None))
+        for i, (p, a) in enumerate(zip(prompts, aids)):
+            if a == aid:
+                ref.add_request(Request(request_id=f"r{i}", prompt=p,
+                                        sampling=SamplingParams(max_new_tokens=6)))
+        ref.run()
+        for i, a in enumerate(aids):
+            if a == aid:
+                assert ref.seqs[f"r{i}"].generated == \
+                    eng.seqs[f"r{i}"].generated, (i, aid)
+
+
+def test_adapter_churn_under_preemption(olmo):
+    """Tight pool + more tenants than slots: adapters fault/evict while
+    sequences preempt; outputs must still match the roomy run."""
+    cfg, m, params = olmo
+    lc = LoRAConfig(rank=4, alpha=8.0, max_loaded_adapters=2)
+    adapters = {f"a{j}": make_adapter(cfg, lc, seed=j + 1) for j in range(3)}
+    prompts = _prompts(cfg, np.random.default_rng(5))
+    aids = ["a0", "a1", "a2", "a0"]
+    roomy = _drive(m, params, _cfg(lora=lc), prompts, aids, adapters)
+    tight = _drive(m, params, _cfg(lora=lc, num_blocks=64), prompts, aids,
+                   adapters)
+    assert tight.adapters.stats.evictions >= 1
+    for i in range(len(prompts)):
+        assert roomy.seqs[f"r{i}"].generated == \
+            tight.seqs[f"r{i}"].generated, i
+
+
+def test_scheduler_adapter_cap_groups_batches(olmo):
+    """max_adapters_per_batch=1 forces per-tenant step groups; every plan
+    respects the cap and outputs still match the uncapped run."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg, n=3)
+    prompts = _prompts(cfg, np.random.default_rng(11))
+    aids = ["a0", "a1", "a2", "a1"]
+    free = _drive(m, params, _cfg(), prompts, aids, adapters)
+
+    eng = LLMEngine(m, params, _cfg(
+        scheduler=SchedulerConfig(max_batch_slots=4, max_batched_tokens=48,
+                                  prefill_chunk=16, max_adapters_per_batch=1)))
+    for aid, w in adapters.items():
+        eng.register_adapter(aid, w)
+    for i, (p, a) in enumerate(zip(prompts, aids)):
+        eng.add_request(Request(request_id=f"r{i}", prompt=p, adapter_id=a,
+                                sampling=SamplingParams(max_new_tokens=6)))
+    while eng.scheduler.has_work():
+        plan = eng.scheduler.plan()
+        seen = {c.seq.request.adapter_id for c in plan.chunks} - {None}
+        assert len(seen) <= 1, seen
+        if not plan.chunks:
+            break
+        eng.steps += 1
+        eng._step_inflight = {c.seq.request_id for c in plan.chunks}
+        try:
+            eng._run_group(plan.chunks, eng.paged_runner or eng.runner)
+        finally:
+            eng._step_inflight = None
+    for i in range(len(prompts)):
+        assert free.seqs[f"r{i}"].generated == eng.seqs[f"r{i}"].generated, i
+
+
+def test_lora_interpret_kernel_path(olmo):
+    """Drive the Pallas bgmv + paged-attention kernels (interpret mode)
+    through the engine with adapters — the TPU code path."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(13), n=2)
+    aids = ["a0", "a1"]
+    ref = _drive(m, params, _cfg(), prompts, aids, adapters, max_new=3)
+    itp = _drive(m, params, _cfg(paged_impl="interpret"), prompts, aids,
+                 adapters, max_new=3)
+    assert itp.paged_steps > 0
+    for i in range(len(prompts)):
+        assert ref.seqs[f"r{i}"].generated == itp.seqs[f"r{i}"].generated, i
+
+
+def test_lora_with_kv_quant(olmo):
+    """Adapter deltas compose with KIVI-quantized pages: quant-paged and
+    quant-gathered read the same bytes and must agree token-for-token."""
+    from repro.core.kv_quant import QuantConfig
+    cfg, m, params = olmo
+    adapters = _adapters(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(17))
+    aids = ["a0", "a1", None, "a0"]
+    q = QuantConfig(bits=8)
+    g = _drive(m, params, _cfg(backend="gathered", kv_quant=q), prompts,
+               aids, adapters)
+    p = _drive(m, params, _cfg(backend="auto", kv_quant=q), prompts, aids,
+               adapters)
+    s = _drive(m, params, _cfg(backend="speculative", kv_quant=q), prompts,
+               aids, adapters)
+    assert p.paged_steps > 0
+    for i in range(len(prompts)):
+        assert g.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
+        # spec verify reads quantized pages WITH adapter deltas and defers
+        # writeback to post-acceptance commit — still exact
+        assert s.seqs[f"r{i}"].generated == p.seqs[f"r{i}"].generated, i
+
+
+def test_prefix_cache_is_adapter_namespaced(olmo):
+    """KV is only content-addressable when the producing weights match: an
+    identical prompt under a DIFFERENT adapter must not hit the cached
+    blocks (their k/v embed the other tenant's deltas), while the same
+    tenant still reuses them — and every stream must equal the dense-merged
+    single-tenant reference."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg)
+    r = np.random.default_rng(29)
+    prompt = list(map(int, r.integers(2, cfg.vocab_size, size=24)))
+    eng = LLMEngine(m, params, _cfg(enable_prefix_cache=True))
+    for aid, w in adapters.items():
+        eng.register_adapter(aid, w)
+    order = [("r0", "a0"), ("r1", "a1"), ("r2", "a0"), ("r3", None)]
+    for rid, aid in order:
+        eng.add_request(Request(request_id=rid, prompt=list(prompt),
+                                adapter_id=aid,
+                                sampling=SamplingParams(max_new_tokens=4)))
+        eng.run()
+    assert eng.seqs["r1"].prefix_hit_tokens == 0  # a1 never hits a0's blocks
+    assert eng.seqs["r3"].prefix_hit_tokens == 0  # base never hits a tenant's
+    assert eng.seqs["r2"].prefix_hit_tokens >= 16  # same tenant reuses
+    for aid in ("a0", "a1", None):
+        pm = merge_adapter(params, adapters[aid], cfg, LC) if aid else params
+        ref = LLMEngine(m, pm, _cfg(lora=None))
+        ref.add_request(Request(request_id="x", prompt=list(prompt),
+                                sampling=SamplingParams(max_new_tokens=4)))
+        ref.run()
+        for rid, a in order:
+            if a == aid:
+                assert eng.seqs[rid].generated == ref.seqs["x"].generated, rid
+
+
+# ---------------------------------------------------------------------------
+# fleet: affinity routing + live migration keeps adapter bindings
+# ---------------------------------------------------------------------------
+
+def test_fleet_adapter_affinity_routing(olmo):
+    cfg, m, params = olmo
+    fleet = ServingFleet(m, params, instances=2, engine_cfg=_cfg())
+    for aid, w in _adapters(cfg).items():
+        fleet.register_adapter(aid, w)
+    r = np.random.default_rng(19)
+    p0 = list(map(int, r.integers(2, cfg.vocab_size, size=16)))
+    fleet.add_request(Request(request_id="r0", prompt=p0, adapter_id="a0",
+                              sampling=SamplingParams(max_new_tokens=4)))
+    first = next(e for e in fleet.engines if "r0" in e.seqs)
+    for _ in range(3):
+        first.step()  # fault a0 in on the chosen instance
+    assert first.adapters.is_loaded("a0")
+    # same tenant again: despite r0's KV making `first` the more loaded
+    # instance, affinity keeps the request with its resident adapter
+    assert fleet.route(Request(request_id="x", prompt=p0,
+                               adapter_id="a0")) is first
+    # a different tenant goes least-loaded as before
+    assert fleet.route(Request(request_id="y", prompt=p0,
+                               adapter_id="a1")) is not first
+
+
+def test_fleet_migration_keeps_adapter_binding(olmo):
+    """Live migration of an adapter-bound sequence: the destination faults
+    the adapter in and the stream finishes exactly like an unmigrated run."""
+    cfg, m, params = olmo
+    adapters = _adapters(cfg)
+    r = np.random.default_rng(23)
+    prompts = [list(map(int, r.integers(2, cfg.vocab_size, size=24)))
+               for _ in range(5)]
+    aids = ["a0", "a1", "a0", "a1", "a0"]
+    ref = _drive(m, params, _cfg(num_blocks=64), prompts, aids, adapters,
+                 max_new=10)
+
+    fleet = ServingFleet(m, params, instances=2,
+                         engine_cfg=_cfg(num_blocks=64),
+                         rebalance_threshold=0.05)
+    for aid, w in adapters.items():
+        fleet.register_adapter(aid, w)
+    for i, (p, a) in enumerate(zip(prompts, aids)):  # force-skew to [0]
+        fleet.engines[0].add_request(Request(
+            request_id=f"r{i}", prompt=p, adapter_id=a,
+            sampling=SamplingParams(max_new_tokens=10)))
+    fleet.run()
+    assert fleet.stats.migrations >= 1
+    dst = fleet.engines[1]
+    moved = [s for s in dst.seqs.values() if s.request.adapter_id]
+    assert moved, "no adapter-bound sequence migrated"
+    # destination faulted the binding's adapter in (miss counted there)
+    assert any(dst.adapters.is_loaded(s.request.adapter_id) for s in moved)
+    assert dst.adapters.stats.misses >= 1
+    for i in range(len(prompts)):
+        assert fleet.seqs[f"r{i}"].generated == \
+            ref.seqs[f"r{i}"].generated, i

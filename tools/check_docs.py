@@ -13,8 +13,9 @@ Five guarantees:
      referenced by a doc — benchmarks that fall out of both are
      undiscoverable and rot;
   5. every `EngineConfig.field` / `SchedulerConfig.field` /
-     `SpeculativeConfig.field` reference in a doc names a real dataclass
-     field (parsed from source with ``ast`` — no heavyweight imports).
+     `SpeculativeConfig.field` / `LoRAConfig.field` reference in a doc
+     names a real dataclass field (parsed from source with ``ast`` — no
+     heavyweight imports).
 
 Exit code 0 = clean; 1 = problems (each printed as ``file: message``).
 """
@@ -32,8 +33,8 @@ MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # ::symbol / #anchor is tolerated and stripped
 CODE_REF = re.compile(r"`([\w./-]+\.(?:py|md|ya?ml|toml|txt))(?:::[\w.]+)?`")
 # `EngineConfig.max_model_len`-style config-field citations in doc prose
-CFG_REF = re.compile(r"`(EngineConfig|SchedulerConfig|SpeculativeConfig)"
-                     r"\.(\w+)`")
+CFG_REF = re.compile(r"`(EngineConfig|SchedulerConfig|SpeculativeConfig"
+                     r"|LoRAConfig)\.(\w+)`")
 
 # where each cited config dataclass is defined (parsed with ast, not
 # imported — the checker must run without jax installed)
@@ -41,6 +42,7 @@ CFG_SOURCES = {
     "EngineConfig": "src/repro/core/engine.py",
     "SpeculativeConfig": "src/repro/core/engine.py",
     "SchedulerConfig": "src/repro/core/scheduler.py",
+    "LoRAConfig": "src/repro/core/lora/config.py",
 }
 
 # roots a bare code reference may be relative to (doc prose often writes
