@@ -17,7 +17,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import Request
 
 
@@ -68,16 +69,28 @@ def gathered_vs_paged():
         dt = time.perf_counter() - t0
         toks = sum(len(s.generated) for s in eng.seqs.values())
         wb = eng.paged_runner.writeback_bytes if eng.paged_runner else 0
-        rows[backend] = (toks, dt, eng.host_copy_bytes, wb, eng.paged_steps)
-    tok_g, dt_g, hcb_g, _, _ = rows["gathered"]
-    tok_p, dt_p, hcb_p, wb_p, psteps = rows["auto"]
+        pct = engine_percentiles(eng)
+        rows[backend] = (toks, dt, eng.host_copy_bytes, wb, eng.paged_steps,
+                         pct)
+        record(workload={"n_requests": len(reqs)},
+               tokens_per_s={backend: toks / dt},
+               latency_percentiles={backend: pct},
+               counters={backend: {"host_copy_bytes": int(eng.host_copy_bytes),
+                                   "writeback_bytes": int(wb),
+                                   "paged_steps": int(eng.paged_steps)}})
+    tok_g, dt_g, hcb_g, _, _, pct_g = rows["gathered"]
+    tok_p, dt_p, hcb_p, wb_p, psteps, pct_p = rows["auto"]
     emit("exec_backend_gathered", 1e6 * dt_g / max(tok_g, 1),
          f"tokens={tok_g};host_copy_bytes={hcb_g};"
-         f"host_copy_per_token={hcb_g // max(tok_g, 1)}")
+         f"host_copy_per_token={hcb_g // max(tok_g, 1)};"
+         f"p50={pct_g['p50'] * 1e3:.1f}ms;p95={pct_g['p95'] * 1e3:.1f}ms;"
+         f"p99={pct_g['p99'] * 1e3:.1f}ms")
     emit("exec_backend_paged", 1e6 * dt_p / max(tok_p, 1),
          f"tokens={tok_p};host_copy_bytes={hcb_p};paged_steps={psteps};"
          f"writeback_bytes={wb_p};"
-         f"host_copy_reduction={hcb_g / max(hcb_p + wb_p, 1):.1f}x")
+         f"host_copy_reduction={hcb_g / max(hcb_p + wb_p, 1):.1f}x;"
+         f"p50={pct_p['p50'] * 1e3:.1f}ms;p95={pct_p['p95'] * 1e3:.1f}ms;"
+         f"p99={pct_p['p99'] * 1e3:.1f}ms")
 
 
 def main():

@@ -1,0 +1,154 @@
+"""Tensor-parallel paged serving on a (data, model) mesh (docs/sharding.md).
+
+Three claims validated, against a single-device paged baseline on the SAME
+greedy request stream:
+
+  * Correctness: the sharded runner is token-for-token identical to the
+    single-device paged path at every swept model-axis size, and
+    ``host_copy_bytes`` stays 0 — sharding changes where page bytes live,
+    never what the engine computes or how it talks to the host.
+  * Capacity: each device holds only its local KV heads, so per-device
+    bytes per block shrink by the axis size — the same ``num_blocks``
+    budget backs mp x the KV capacity (asserted >= 3.5x at mp = 4).
+  * Roofline accounting: measured tokens/s is reported as a fraction of
+    ``launch/roofline.py:decode_step_bound`` for the swept mesh — on the
+    CPU host the fraction is tiny (the bound models TPU v5e), but it is
+    the same accounting the dry-run artifacts use, so the mp-scaling SHAPE
+    of the bound (collective term appearing, memory term shrinking) is
+    what the sweep exercises.
+
+Mesh devices come from ``--xla_force_host_platform_device_count``, which
+must be set before the first jax import — so the sweep runs in a CHILD
+process (the ``tests/test_distributed.py`` idiom); the parent relays the
+child's rows into the persisted ``BENCH_sharded.json`` report.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import benchmarks.common as common
+from benchmarks.common import emit, record
+
+_CHILD_ENV = "BENCH_SHARDED_CHILD"
+_JSON_TAG = "BENCH_SHARDED_JSON "
+_DEVICES = 8
+_SWEEP = (1, 2, 4)  # model-axis sizes; 1 = the single-device paged baseline
+
+
+def _child() -> None:
+    import time
+
+    import numpy as np
+
+    from benchmarks.common import engine_percentiles, make_engine
+    from repro.core import Request, SamplingParams
+    from repro.launch.roofline import decode_step_bound
+    from repro.sharding import ShardingConfig
+
+    n_req = int(os.environ.get("BENCH_SHARDED_REQUESTS", "6"))
+    max_new = int(os.environ.get("BENCH_SHARDED_MAX_NEW", "16"))
+    rng = np.random.default_rng(7)
+    prompts = [list(map(int, rng.integers(2, 512,
+                                          size=int(rng.integers(10, 40)))))
+               for _ in range(n_req)]
+    payload = {"workload": {"n_requests": n_req, "max_new_tokens": max_new,
+                            "devices": _DEVICES, "sweep": list(_SWEEP)},
+               "tokens_per_s": {}, "latency_percentiles": {}, "counters": {}}
+    streams = {}
+    for mp in _SWEEP:
+        sharding = ShardingConfig(model_axis=mp) if mp > 1 else None
+        eng = make_engine(enable_prefix_cache=False, sharding=sharding)
+        for i, p in enumerate(prompts):
+            eng.add_request(Request(
+                request_id=f"r{i}", prompt=p,
+                sampling=SamplingParams(max_new_tokens=max_new)))
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(s.generated) for s in eng.seqs.values())
+        streams[mp] = {f"r{i}": eng.seqs[f"r{i}"].generated
+                       for i in range(n_req)}
+        assert streams[mp] == streams[_SWEEP[0]], \
+            f"sharded mp={mp} diverged from the single-device paged stream"
+        assert eng.store.host_copy_bytes == 0, \
+            f"mp={mp}: host_copy_bytes={eng.store.host_copy_bytes}"
+        r = eng.paged_runner
+        dev_bpb = r.device_kv_bytes_per_block()
+        host_bpb = eng.store.kv_bytes_per_block()
+        capacity = host_bpb / dev_bpb
+        if mp == 4:
+            assert capacity >= 3.5, \
+                f"mp=4 per-device KV capacity win {capacity:.2f}x < 3.5x"
+        cfg = eng.model.cfg
+        mean_len = float(np.mean([s.num_computed
+                                  for s in eng.seqs.values()]))
+        bound = decode_step_bound(
+            cfg, batch=eng.cfg.scheduler.max_batch_slots,
+            seq_len=int(mean_len), model_shards=mp,
+            kv_sharded=getattr(r, "kv_sharded", mp > 1),
+            ff_sharded=getattr(r, "ff_sharded", False))
+        pct = engine_percentiles(eng)
+        frac = (toks / dt) / bound["tokens_per_s"]
+        emit(f"sharded_mp{mp}", 1e6 * dt / max(toks, 1),
+             f"tokens={toks};tok_s={toks / dt:.1f};"
+             f"kv_capacity={capacity:.1f}x;"
+             f"p50={pct['p50'] * 1e3:.1f}ms;p95={pct['p95'] * 1e3:.1f}ms;"
+             f"p99={pct['p99'] * 1e3:.1f}ms;"
+             f"roofline_frac={frac:.2e};"
+             f"mirror_upload={r.mirror_upload_bytes}")
+        payload["tokens_per_s"][f"mp{mp}"] = toks / dt
+        payload["latency_percentiles"][f"mp{mp}"] = pct
+        payload["counters"][f"mp{mp}"] = {
+            "host_copy_bytes": int(eng.store.host_copy_bytes),
+            "device_kv_bytes_per_block": int(dev_bpb),
+            "host_kv_bytes_per_block": int(host_bpb),
+            "kv_capacity_x": capacity,
+            "mirror_upload_bytes": int(r.mirror_upload_bytes),
+            "writeback_bytes": int(r.writeback_bytes),
+            "roofline_tokens_per_s_bound": bound["tokens_per_s"],
+            "roofline_fraction": frac,
+        }
+    emit("sharded_parity", 0.0,
+         f"token_for_token=ok;sweep={'-'.join(map(str, _SWEEP))}")
+    print(_JSON_TAG + json.dumps(payload), flush=True)
+
+
+def main() -> None:
+    if os.environ.get(_CHILD_ENV):
+        _child()
+        return
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_DEVICES}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                          capture_output=True, text=True, timeout=1800,
+                          cwd=root, env=env)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise RuntimeError(
+            f"bench_sharded child failed (rc={proc.returncode})")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_JSON_TAG):
+            record(**json.loads(line[len(_JSON_TAG):]))
+        elif line.startswith("sharded") and line.count(",") >= 2:
+            # re-emit so the rows land in the parent's active report
+            name, us, derived = line.split(",", 2)
+            emit(name, float(us), derived)
+
+
+if __name__ == "__main__":
+    if os.environ.get(_CHILD_ENV):
+        _child()
+    else:
+        common.start_report("sharded")
+        try:
+            main()
+        finally:
+            common.save_report()

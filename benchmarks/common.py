@@ -1,8 +1,17 @@
-"""Shared benchmark fixtures/helpers."""
+"""Shared benchmark fixtures/helpers.
+
+Besides the engine/request factories, this module owns the persisted-result
+machinery (docs/benchmarks.md): ``benchmarks/run.py`` wraps every bench in
+``start_report(name)`` / ``save_report()``, each ``emit`` row lands in the
+active report automatically, and benches attach structured data —
+workload params, tokens/s, latency percentiles, counters — via ``record``.
+``save_report`` writes ``BENCH_<name>.json`` at the repo root."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import numpy as np
@@ -69,4 +78,65 @@ def timed(fn, *args, warmup=0, iters=1, **kw):
 def emit(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)
+    if _ACTIVE is not None:
+        _ACTIVE["rows"].append({"name": name, "us_per_call": us_per_call,
+                                "derived": derived})
     return row
+
+
+# ---------------------------------------------------------------------------
+# persisted results: BENCH_<name>.json (one file per bench, repo root)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[dict] = None
+_REPORT_DIR = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def start_report(name: str) -> dict:
+    """Begin collecting a bench's persisted report. Fixed top-level schema —
+    every ``BENCH_<name>.json`` has the same keys, populated or empty:
+    ``workload`` (request-stream / engine params), ``tokens_per_s``,
+    ``latency_percentiles`` (p50/p95/p99 inter-token seconds, see
+    ``repro.core.metrics.latency_percentiles``), ``counters`` (byte/step
+    telemetry), and ``rows`` (every ``emit`` CSV row, structured)."""
+    global _ACTIVE
+    _ACTIVE = {"bench": name, "created_unix": time.time(), "workload": {},
+               "tokens_per_s": {}, "latency_percentiles": {}, "counters": {},
+               "rows": []}
+    return _ACTIVE
+
+
+def record(**sections) -> None:
+    """Merge structured data into the active report, e.g.
+    ``record(workload={"n_requests": 8}, counters={"host_copy_bytes": 0})``.
+    Dict-valued sections merge key-wise; anything else replaces the slot.
+    No-op when no report is active (benches runnable standalone)."""
+    if _ACTIVE is None:
+        return
+    for key, val in sections.items():
+        slot = _ACTIVE.get(key)
+        if isinstance(slot, dict) and isinstance(val, dict):
+            slot.update(val)
+        else:
+            _ACTIVE[key] = val
+
+
+def save_report() -> Optional[str]:
+    """Write the active report to ``BENCH_<name>.json`` and deactivate.
+    Returns the path, or None when no report is active."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        return None
+    path = os.path.join(_REPORT_DIR, f"BENCH_{_ACTIVE['bench']}.json")
+    with open(path, "w") as f:
+        json.dump(_ACTIVE, f, indent=2, sort_keys=True)
+        f.write("\n")
+    _ACTIVE = None
+    return path
+
+
+def engine_percentiles(eng) -> dict:
+    """p50/p95/p99 inter-token latency over an engine's finished requests."""
+    from repro.core.metrics import latency_percentiles
+
+    return latency_percentiles(eng.finished)

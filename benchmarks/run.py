@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV rows. Roofline terms for the full-size
 (arch x shape x mesh) grid come from the dry-run artifacts
 (``python -m repro.launch.roofline``), not from CPU wall time.
+
+Every bench additionally persists a ``BENCH_<name>.json`` report at the repo
+root (``benchmarks/common.py``: the harness opens the report, every ``emit``
+row lands in it, and benches attach workload params / tokens-per-s /
+latency percentiles / counters via ``record``).
 """
 from __future__ import annotations
 
@@ -11,7 +16,9 @@ import traceback
 
 from benchmarks import (bench_batching, bench_chunked_prefill, bench_disagg,
                         bench_kernels, bench_kv_quant, bench_lora, bench_moe,
-                        bench_paging, bench_prefix_cache, bench_speculative)
+                        bench_paging, bench_prefix_cache, bench_sharded,
+                        bench_speculative)
+from benchmarks.common import save_report, start_report
 
 ALL = [
     ("batching", bench_batching.main),
@@ -24,6 +31,7 @@ ALL = [
     ("moe", bench_moe.main),
     ("disagg", bench_disagg.main),
     ("kernels", bench_kernels.main),
+    ("sharded", bench_sharded.main),
 ]
 
 
@@ -34,12 +42,15 @@ def main() -> None:
     for name, fn in ALL:
         if only and only != name:
             continue
+        start_report(name)
         try:
             fn()
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+        finally:
+            save_report()
     if failures:
         raise SystemExit(f"{failures} benchmark(s) failed")
 

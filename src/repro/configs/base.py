@@ -97,6 +97,16 @@ class ModelConfig:
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
 
+    # --- tensor-parallel serving (docs/sharding.md) ----------------------------------
+    # Set only on the shard-LOCAL config the sharded paged runner builds
+    # (num_heads / num_kv_heads / d_ff already divided by the model-axis
+    # size): tp_axis names the mesh axis to all-reduce over after the
+    # attention output projection (and after MLP w2 when tp_ff_sharded).
+    # None (the default for every registered arch) means single-device
+    # semantics — no collective is ever traced.
+    tp_axis: Optional[str] = None
+    tp_ff_sharded: bool = False
+
     # ---------------------------------------------------------------------------
     @property
     def num_layers(self) -> int:

@@ -9,7 +9,11 @@ degenerated to page-count == 1 per sequence (DESIGN §4).
 
 This object is pure host-side accounting: it never touches device memory. The
 physical pages live in the engine's PagedStore; the TPU-side kernel consumes
-the same block tables (kernels/paged_attention).
+the same block tables (kernels/paged_attention). Under tensor-parallel
+serving (docs/sharding.md) nothing here changes either: block ids, tables
+and refcounts are mesh-global, while each device's mirror of a block holds
+only its local KV heads — per-device bytes per block are 1/model_axis of
+the host store's, which is where the sharded capacity win comes from.
 """
 from __future__ import annotations
 

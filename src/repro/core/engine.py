@@ -32,6 +32,13 @@ consumes), and a ``ModelRunner`` backend executes each scheduled batch:
     target-distributed prefix — greedy speculative output is token-for-token
     identical to plain paged decoding (docs/speculative.md).
 
+With ``EngineConfig.sharding`` set to more than one device, the paged slot
+is filled by ``ShardedPagedRunner`` instead: the same three hot paths run
+under ``shard_map`` on a (data, model) mesh — KV page stores and LoRA
+adapter tables partitioned by head over the model axis, one all-reduce per
+layer — while everything host-side here (block tables, prefix cache,
+writeback) keeps global shapes (docs/sharding.md).
+
 ``EngineConfig.execution_backend`` selects: "auto" (paged when the model
 supports it, speculative when ``speculative`` is also configured),
 "gathered", "paged", or "speculative" (the latter two error if
@@ -65,6 +72,7 @@ from repro.core.request import Request, SeqState, SeqStatus
 from repro.core.sampling import (SamplingParams, greedy_token_host,
                                  rejection_sample, sample_token)
 from repro.core.scheduler import ChunkWork, Scheduler, SchedulerConfig, StepPlan
+from repro.sharding import ShardingConfig
 
 _rejection_jit = jax.jit(rejection_sample, static_argnames=("params",))
 
@@ -103,6 +111,9 @@ class EngineConfig:
     execution_backend: str = "auto"  # auto | gathered | paged | speculative
     paged_impl: str = "auto"  # paged-attention op impl: auto | pallas | interpret | ref
     speculative: Optional[SpeculativeConfig] = None  # draft–verify decode
+    # tensor-parallel paged serving on a (data, model) mesh; None or a
+    # 1x1 config keeps every backend single-device (docs/sharding.md)
+    sharding: Optional[ShardingConfig] = None
     seed: int = 0
 
 

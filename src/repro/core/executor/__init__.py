@@ -16,6 +16,10 @@
     planes, dequantized in-VMEM by the quantized paged-attention kernel —
     docs/kv_quant.md). Only quant configs the page layout cannot hold
     (GEAR residuals, non-KIVI grouping axes) fall back to gathered.
+  * ShardedPagedRunner replaces PagedRunner when ``EngineConfig.sharding``
+    asks for more than one device: the same paged/speculative/LoRA hot
+    paths, but run under ``shard_map`` on a (data, model) mesh with KV
+    page stores partitioned by head over the model axis (docs/sharding.md).
 """
 from repro.core.executor.base import (ExecBatch, ModelRunner,  # noqa: F401
                                       chunk_carries_extras, marshal_batch)
@@ -43,8 +47,17 @@ def make_runners(model, params, engine_cfg, store):
                 and store.attn_kv_leaves()
                 and "state" not in store.kinds
                 and (engine_cfg.kv_quant is None or store.quantized))
+    sharding = getattr(engine_cfg, "sharding", None)
     if backend in ("auto", "paged", "speculative") and eligible:
-        paged = PagedRunner(model, params, engine_cfg, store)
+        if sharding is not None and sharding.num_devices > 1:
+            from repro.core.executor.sharded import ShardedPagedRunner
+            paged = ShardedPagedRunner(model, params, engine_cfg, store)
+        else:
+            paged = PagedRunner(model, params, engine_cfg, store)
+    elif sharding is not None and sharding.num_devices > 1:
+        raise ValueError(
+            "EngineConfig.sharding needs the paged backend (pure global-"
+            "attention stack); the gathered fallback is single-device only")
     if backend in ("paged", "speculative") and paged is None:
         raise ValueError(
             f"execution_backend={backend!r} but the model has no paged "

@@ -78,6 +78,14 @@ class PagedRunner(ModelRunner):
         self._extend_jit = jax.jit(model.extend_paged,
                                    static_argnames=("impl",),
                                    donate_argnums=(2,))
+        # the k+1-position verify forward is owned HERE (not by the
+        # speculative runner) so a sharded subclass can swap all three
+        # dispatches at once — SpeculativeRunner borrows this jit and
+        # thereby inherits whatever mesh the paged runner executes on
+        self._verify_jit = jax.jit(model.verify_paged,
+                                   static_argnames=("impl",),
+                                   donate_argnums=(2,)) \
+            if model.verify_paged is not None else None
         # sacrificial page for ragged-chunk padding writes; the ENGINE
         # reserves it (block manager ownership) right after construction —
         # it is never a member of any real block table
@@ -112,6 +120,37 @@ class PagedRunner(ModelRunner):
                     "zero": t(self.store.qplanes[idx]["zero"][r])}
         return t(self.store.stores[idx][r])
 
+    # ---- device-placement hooks (overridden by the sharded runner) ----
+    # Every host->device transfer of page bytes funnels through these three
+    # methods so a subclass can place the mirror on a mesh (KV-head axis
+    # sharded over "model") without re-implementing sync/call_pages.
+
+    def _put_mirror_leaf(self, leaf):
+        """Full-upload placement of one mirror leaf (array or quantized
+        {"codes","scale","zero"} dict, kernel layout (KV, NB, P, D))."""
+        return jax.tree.map(jnp.asarray, leaf)
+
+    def _put_block_payload(self, payload):
+        """Placement of the dirty-block payload tree (leaves (KV, n, P, D))
+        consumed by the donated ``_write_blocks`` dispatch."""
+        return payload
+
+    def _put_tail(self, tail_r):
+        """Placement of one staged fp tail (B, P + C, KV, D)."""
+        return jnp.asarray(tail_r)
+
+    def device_kv_bytes_per_block(self) -> int:
+        """Per-DEVICE bytes one block occupies in the live mirror — on a
+        single device this equals the host store's per-block footprint; on
+        the sharded runner each device holds only its local KV heads, which
+        is exactly the capacity headroom bench_sharded.py asserts."""
+        self.sync()
+        total = 0
+        for leaf in jax.tree.leaves(self._pages):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            total += int(np.prod(shard)) * leaf.dtype.itemsize
+        return total // self.cfg.num_blocks
+
     def sync(self) -> None:
         """Bring the device mirror up to date with the host store."""
         if self._pages is not None and self._synced_version == self.store.version:
@@ -130,7 +169,7 @@ class PagedRunner(ModelRunner):
                     self.mirror_upload_bytes += sum(
                         a.nbytes for a in jax.tree.leaves(leaf))
                     pages[si][f"r{r}"].setdefault(lkey, {})[name] = \
-                        jax.tree.map(jnp.asarray, leaf)
+                        self._put_mirror_leaf(leaf)
             self._pages = tuple(pages)
         elif len(dirty):
             # pad to pow2 (repeat first id — duplicate writes of identical
@@ -150,7 +189,8 @@ class PagedRunner(ModelRunner):
                     payload[si][f"r{r}"].setdefault(lkey, {})[name] = leaf
             try:
                 self._pages = _write_blocks(self._pages, blocks_j,
-                                            tuple(payload))
+                                            self._put_block_payload(
+                                                tuple(payload)))
             except Exception:
                 # the mirror was donated into the failed call;
                 # drop it so the next sync re-uploads from scratch
@@ -185,7 +225,7 @@ class PagedRunner(ModelRunner):
             self.tail_upload_bytes += tail.nbytes
             for r in range(reps[si]):
                 leaf = dict(pages[si][f"r{r}"][lkey][name])
-                leaf["tail"] = jnp.asarray(tail[r])
+                leaf["tail"] = self._put_tail(tail[r])
                 pages[si][f"r{r}"][lkey][name] = leaf
         return tuple(pages)
 

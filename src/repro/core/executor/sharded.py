@@ -1,0 +1,347 @@
+"""ShardedPagedRunner: tensor-parallel paged serving on a (data, model) mesh.
+
+Megatron-style TP applied to the paged hot paths (survey §IV.C): every
+attention head — and optionally every KV head and MLP hidden unit — lives on
+exactly ONE shard of the mesh's "model" axis. The three paged dispatches
+(``decode_paged`` / ``extend_paged`` / ``verify_paged``) run under
+``shard_map`` with a shard-LOCAL copy of the model (``num_heads`` etc.
+divided by the axis size), so per-shard the compute graph is literally the
+single-device graph at 1/mp width; the only collective on the hot path is
+one ``psum`` per layer after the attention output projection (plus one
+after the MLP down-projection when the hidden axis is sharded) — placed in
+``models/attention.py:proj_out_lora`` / ``models/model.py:mlp_apply``
+behind ``ModelConfig.tp_axis``.
+
+What this buys the serving engine (docs/sharding.md):
+
+  * KV page stores are partitioned BY HEAD over the model axis — the device
+    mirror leaf (KV, NB, P, D) shards on axis 0 — so each device holds
+    1/mp of every block's bytes. The engine's ``BlockManager`` budget
+    (``num_blocks``) is per-pool, so the same HBM per device now backs
+    mp x the blocks: KV capacity scales with the mesh
+    (``device_kv_bytes_per_block`` measures it; bench_sharded.py asserts
+    the >= 3.5x win at mp = 4).
+  * The LoRA adapter tables shard over the same axis (the B factor of
+    q/k/v projections by output column, the A factor of o/down projections
+    by input row), so multi-tenant adapter deltas stay shard-local and join
+    the SAME per-layer psum as the base projection — zero extra collectives
+    for LoRA.
+  * The speculative runner borrows ``_verify_jit`` from here, so target
+    verify runs on the mesh while the (small) draft stays single-device.
+
+Head layout subtleties, decided ONCE at construction:
+
+  * ``num_heads % mp != 0`` is an error — there is no sensible partial-head
+    split under the 3D (d, H, hd) param layout (see
+    ``make_attention_params``).
+  * GQA replicated-KV fallback: when ``num_kv_heads % mp != 0`` the KV
+    heads stay replicated (the classic GQA cost, e.g. 4 KV heads on an
+    8-way axis). A CONTIGUOUS head split would then break group
+    assignment — the local model maps its head ``l`` to KV head
+    ``l // (G/mp)`` where G = H/KV, which only matches the global
+    ``h // G`` if each shard holds one head from every group-chunk. So the
+    q-side params (wq, its bias, the LoRA wq-B / wo-A factors) and the wo
+    rows are PERMUTED so shard i's block is
+    ``[g*G + i*G/mp + t for g in range(KV) for t in range(G/mp)]``; the
+    psum is permutation-invariant, K/V and the page stores are untouched.
+    When KV divides mp (the common case) the contiguous split is exact and
+    no permutation happens.
+  * GLU MLPs under a sharded hidden axis: ``w1`` emits 2*d_ff columns that
+    ``mlp_apply`` splits in half — a contiguous column split would hand a
+    shard half "up" and half "gate" columns of DIFFERENT units. ``w1``'s
+    columns (+ bias + LoRA w1-B) are permuted so each shard's local block
+    is ``[u_i ; g_i]``; the post-activation hidden slice then lands exactly
+    on ``w2``'s contiguous row shard.
+
+The host side is untouched: the host-authoritative ``PagedModelState``,
+block manager, prefix cache and writeback all keep GLOBAL shapes —
+``jax.device_get`` on the sharded write leaves assembles the global array,
+and ``host_copy_bytes`` stays 0 exactly as on the single-device paged path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.executor.paged import PagedRunner
+from repro.core.executor.state import PagedModelState
+from repro.models.common import is_glu, param_axes_tree
+from repro.sharding import ShardingConfig, serving_tp_rules, shard_map, use_rules
+
+
+def _key(entry) -> Optional[str]:
+    return getattr(entry, "key", None)
+
+
+class _ShardedDispatch:
+    """Drop-in replacement for one of PagedRunner's jitted dispatches.
+
+    Builds (and caches, keyed by operand tree structure + impl) a
+    ``jax.jit(shard_map(...))`` around the LOCAL model's paged forward.
+    Specs never depend on array shapes — only on which leaves exist (fp vs
+    quantized pages, LoRA present or not) — so the cache stays tiny while
+    jit handles shape polymorphism underneath as usual."""
+
+    def __init__(self, runner: "ShardedPagedRunner", kind: str):
+        self.runner = runner
+        self.kind = kind  # "decode" | "extend" | "verify"
+        self._cache: Dict[tuple, Any] = {}
+
+    def __call__(self, params, tokens, pages, tables, lengths, *extra,
+                 lora=None, impl: str = "auto"):
+        lora = self.runner._fix_lora(lora)
+        key = (jax.tree.structure(pages),
+               None if lora is None else jax.tree.structure(lora),
+               len(extra), impl)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._build(pages, lora, len(extra), impl)
+            self._cache[key] = fn
+        return fn(params, tokens, pages, tables, lengths, *extra, lora)
+
+    def _build(self, pages, lora, n_extra: int, impl: str):
+        r = self.runner
+        model_fn = {"decode": r.local_model.decode_paged,
+                    "extend": r.local_model.extend_paged,
+                    "verify": r.local_model.verify_paged}[self.kind]
+
+        def inner(params, tokens, pages, tables, lengths, *rest):
+            *extra, lora = rest
+            # the local trace must not re-apply mesh constraints: inside
+            # shard_map every lconstraint is shard-local and the identity
+            with use_rules(None):
+                return model_fn(params, tokens, pages, tables, lengths,
+                                *extra, lora=lora, impl=impl)
+
+        pages_specs = r._pages_specs(pages)
+        lora_specs = P() if lora is None else r._lora_specs(lora)
+        in_specs = (r._param_specs, P(), pages_specs, P(), P(),
+                    *([P()] * n_extra), lora_specs)
+        writes_spec = r._writes_spec(self.kind)
+        # logits replicated (final psum), new pages mirror the input pages'
+        # placement (quantized tails ride through), writes shard on KV
+        out_specs = (P(), pages_specs, writes_spec)
+        mapped = shard_map(inner, mesh=r.mesh,
+                           axis_names=set(r.mesh.axis_names),
+                           in_specs=in_specs, out_specs=out_specs,
+                           check_vma=False)
+        return jax.jit(mapped, donate_argnums=(2,))
+
+
+class ShardedPagedRunner(PagedRunner):
+    name = "sharded"
+
+    def __init__(self, model, params, engine_cfg,
+                 store: PagedModelState, *, mesh=None):
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.model import build_model
+
+        sh = getattr(engine_cfg, "sharding", None) or ShardingConfig()
+        if mesh is None:
+            mesh = make_serving_mesh(sh.data_axis, sh.model_axis)
+        self.mesh = mesh
+        mp = int(mesh.shape.get("model", 1))
+        self.mp = mp
+        cfg = model.cfg
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        f = cfg.d_ff
+        if mp > 1 and H % mp != 0:
+            raise ValueError(
+                f"num_heads={H} is not divisible by the model axis ({mp}); "
+                "the 3D head-split param layout cannot shard inside a head")
+        self.kv_sharded = mp > 1 and KV % mp == 0
+        if mp > 1 and not self.kv_sharded and (H // mp) % KV != 0:
+            raise ValueError(
+                f"replicated-KV fallback needs the GQA group count "
+                f"({H // KV}) divisible by the model axis ({mp}): each "
+                f"shard's {H // mp} local heads must split evenly over the "
+                f"{KV} replicated KV heads")
+        ff_ok = all(s.ff in ("mlp", "none")
+                    for pattern, _ in cfg.stages for s in pattern)
+        self.ff_sharded = mp > 1 and f % mp == 0 and ff_ok
+
+        # ---- permutations (see module docstring) ----------------------
+        self._head_order: Optional[np.ndarray] = None
+        self._head_order_blocked: Optional[np.ndarray] = None
+        if mp > 1 and not self.kv_sharded:
+            G, Hl = H // KV, H // mp
+            Gl = G // mp
+            order = np.empty(H, np.int32)
+            for i in range(mp):
+                for g in range(KV):
+                    for t in range(Gl):
+                        order[i * Hl + g * Gl + t] = g * G + i * Gl + t
+            if not np.array_equal(order, np.arange(H)):  # identity for MQA
+                self._head_order = order
+                self._head_order_blocked = (
+                    order[:, None] * hd + np.arange(hd)).reshape(-1)
+        self._glu_order: Optional[np.ndarray] = None
+        if self.ff_sharded and is_glu(cfg.activation):
+            fl = f // mp
+            self._glu_order = np.concatenate(
+                [np.concatenate([np.arange(i * fl, (i + 1) * fl),
+                                 f + np.arange(i * fl, (i + 1) * fl)])
+                 for i in range(mp)]).astype(np.int32)
+
+        # ---- shard-local model ----------------------------------------
+        # inside shard_map every param leaf arrives at 1/mp width; a model
+        # built from the LOCAL config reshapes/splits those leaves exactly
+        # as the single-device model does its global ones
+        if mp > 1:
+            local_cfg = dataclasses.replace(
+                cfg,
+                num_heads=H // mp,
+                num_kv_heads=KV // mp if self.kv_sharded else KV,
+                d_ff=f // mp if self.ff_sharded else f,
+                tp_axis="model",
+                tp_ff_sharded=self.ff_sharded)
+            self.local_model = build_model(local_cfg)
+        else:
+            self.local_model = model
+
+        self._rules = serving_tp_rules(mesh, kv_sharded=self.kv_sharded,
+                                       ff_sharded=self.ff_sharded)
+        page = P("model", None, None, None) if self.kv_sharded else P()
+        tail = P(None, None, "model", None) if self.kv_sharded else P()
+        self._page_sharding = NamedSharding(mesh, page)
+        self._tail_sharding = NamedSharding(mesh, tail)
+        self._lora_cache: Optional[Tuple[Any, Any]] = None
+
+        super().__init__(model, params, engine_cfg, store)
+        # self.model stays the GLOBAL model (host-side shape bookkeeping,
+        # draft-config comparisons); self.params becomes the mesh-placed
+        # (and, where needed, permuted) tree the dispatchers consume
+        self.params = self._place_params(params)
+        self._decode_jit = _ShardedDispatch(self, "decode")
+        self._extend_jit = _ShardedDispatch(self, "extend")
+        if model.verify_paged is not None:
+            self._verify_jit = _ShardedDispatch(self, "verify")
+
+    # ---- parameter placement -----------------------------------------
+    def _permute_param(self, arr, axes):
+        for axis_i, name in enumerate(axes):
+            if (name == "heads" and self._head_order is not None
+                    and arr.shape[axis_i] == len(self._head_order)):
+                arr = jnp.take(jnp.asarray(arr), self._head_order,
+                               axis=axis_i)
+            if (name == "ff" and self._glu_order is not None
+                    and arr.shape[axis_i] == len(self._glu_order)):
+                arr = jnp.take(jnp.asarray(arr), self._glu_order,
+                               axis=axis_i)
+        return arr
+
+    def _place_params(self, params):
+        shapes = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0), max_seq=0))
+        axes = param_axes_tree(shapes)
+
+        def is_axes(t):
+            return (isinstance(t, tuple) and len(t) > 0
+                    and all(x is None or isinstance(x, str) for x in t))
+
+        self._param_specs = jax.tree.map(
+            lambda ax, arr: self._rules.pspec(ax, arr.shape),
+            axes, params, is_leaf=is_axes)
+        return jax.tree.map(
+            lambda ax, arr, spec: jax.device_put(
+                self._permute_param(arr, ax),
+                NamedSharding(self.mesh, spec)),
+            axes, params, self._param_specs, is_leaf=is_axes)
+
+    # ---- operand spec trees ------------------------------------------
+    def _pages_specs(self, pages):
+        page = self._page_sharding.spec
+        tail = self._tail_sharding.spec
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: tail if _key(path[-1]) == "tail" else page,
+            pages)
+
+    def _writes_spec(self, kind: str) -> P:
+        if not self.kv_sharded:
+            return P()
+        # decode writes (B, KV, D); extend/verify writes (B, C, KV, D)
+        return P(None, "model", None) if kind == "decode" \
+            else P(None, None, "model", None)
+
+    def _lora_pspec(self, site: Optional[str], letter: Optional[str]) -> P:
+        if self.mp == 1:
+            return P()
+        if letter == "b":  # (R, T, rank, Dout): shard the output columns
+            if site == "wq":
+                return P(None, None, None, "model")
+            if site in ("wk", "wv") and self.kv_sharded:
+                return P(None, None, None, "model")
+            if site == "w1" and self.ff_sharded:
+                return P(None, None, None, "model")
+        if letter == "a":  # (R, T, Din, rank): shard the input rows
+            if site == "wo":
+                return P(None, None, "model", None)
+            if site == "w2" and self.ff_sharded:
+                return P(None, None, "model", None)
+        return P()
+
+    def _lora_specs(self, lora):
+        def spec(path, leaf):
+            if _key(path[0]) == "ids":
+                return P()
+            return self._lora_pspec(_key(path[-2]), _key(path[-1]))
+
+        return jax.tree_util.tree_map_with_path(spec, lora)
+
+    def _fix_lora(self, lora):
+        """Mesh-place a marshalled lora operand.
+
+        The adapter tables are jit outputs COMMITTED to the default device
+        (``_write_slot``); feeding them to a multi-device jit raises
+        "incompatible devices", so every stage leaf is explicitly
+        ``device_put`` with its TP sharding (wq-B / wo-A additionally
+        permuted under the GQA fallback, w1-B under GLU). The placed copy
+        is cached by table-tuple IDENTITY — the store replaces the whole
+        tuple on every adapter fault-in, so identity equality is exactly
+        "nothing changed since last step"."""
+        if lora is None or self.mp == 1:
+            return lora
+        stages = lora["stages"]
+        if self._lora_cache is not None and self._lora_cache[0] is stages:
+            placed = self._lora_cache[1]
+        else:
+            def place(path, leaf):
+                site, letter = _key(path[-2]), _key(path[-1])
+                arr = jnp.asarray(leaf)
+                if self._head_order_blocked is not None:
+                    if site == "wq" and letter == "b":
+                        arr = jnp.take(arr, self._head_order_blocked, axis=3)
+                    if site == "wo" and letter == "a":
+                        arr = jnp.take(arr, self._head_order_blocked, axis=2)
+                if (self._glu_order is not None and site == "w1"
+                        and letter == "b"):
+                    arr = jnp.take(arr, self._glu_order, axis=3)
+                return jax.device_put(
+                    arr, NamedSharding(self.mesh,
+                                       self._lora_pspec(site, letter)))
+
+            placed = jax.tree_util.tree_map_with_path(place, stages)
+            self._lora_cache = (stages, placed)
+        ids = jax.device_put(jnp.asarray(lora["ids"]),
+                             NamedSharding(self.mesh, P()))
+        return {"ids": ids, "stages": placed}
+
+    # ---- device-placement hooks (PagedRunner funnels all page traffic
+    # through these three) --------------------------------------------
+    def _put_mirror_leaf(self, leaf):
+        return jax.tree.map(
+            lambda a: jax.device_put(np.asarray(a), self._page_sharding),
+            leaf)
+
+    def _put_block_payload(self, payload):
+        return jax.tree.map(
+            lambda a: jax.device_put(np.asarray(a), self._page_sharding),
+            payload)
+
+    def _put_tail(self, tail_r):
+        return jax.device_put(np.asarray(tail_r), self._tail_sharding)

@@ -73,9 +73,16 @@ class SpeculativeRunner(ModelRunner):
         # different draft runs base-only; rejection sampling keeps outputs
         # exactly target-distributed either way.
         self.draft_lora_ok = draft_model.cfg == self.model.cfg
-        self._verify_jit = jax.jit(self.model.verify_paged,
-                                   static_argnames=("impl",),
-                                   donate_argnums=(2,))
+        # borrow the TARGET verify dispatch from the paged runner rather
+        # than building our own: on a ShardedPagedRunner this is the
+        # shard_map dispatcher over the mesh (its params are placed/permuted
+        # per shard — a freshly jitted global-model trace would misread
+        # them), on a plain PagedRunner it is the identical single-device
+        # jit this used to construct. The DRAFT side below stays a plain
+        # single-device jit on purpose: the draft's pages are disposable
+        # device-local state and its params are the engine's original
+        # (unpermuted) tree — see docs/sharding.md.
+        self._verify_jit = paged._verify_jit
         self._draft_extend_jit = jax.jit(draft_model.verify_paged,
                                          static_argnames=("impl",),
                                          donate_argnums=(2,))

@@ -15,7 +15,11 @@ reads them:
 
 Mutations bump ``version`` and record the touched block ids in
 ``dirty_blocks`` so device-resident mirrors (PagedRunner) can invalidate or
-incrementally re-sync instead of re-uploading the whole store.
+incrementally re-sync instead of re-uploading the whole store. The host
+arrays stay authoritative and whole under tensor parallelism too — the
+sharded runner (docs/sharding.md) merely places its device mirror with the
+KV-head axis partitioned over the mesh, so each device materializes only
+its local heads' slice of every page.
 
 KIVI quantization at rest (``EngineConfig.kv_quant``, docs/kv_quant.md):
 when the cache is a pure attention-K/V page set, the page stores themselves

@@ -18,6 +18,30 @@ class RequestMetrics:
     prefix_hit_tokens: int
     preemptions: int
     qoe: float
+    # per-token emission timestamps (engine wall clock) — what the p50/p95/
+    # p99 inter-token latency percentiles in benchmarks/common.py
+    # (``latency_percentiles``) are computed from; a mean TPOT hides the
+    # tail stalls (mirror re-uploads, preemptions) that SLOs care about
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+
+def latency_percentiles(metrics: List["RequestMetrics"]) -> Dict[str, float]:
+    """p50/p95/p99 inter-token latency (seconds) over all finished requests.
+
+    Pools every request's successive token-time deltas — the per-token view
+    of TPOT. Empty input (or single-token streams only) yields zeros so
+    callers can always log the keys."""
+    deltas: List[float] = []
+    for m in metrics:
+        deltas.extend(b - a for a, b in zip(m.token_times, m.token_times[1:]))
+    if not deltas:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    deltas.sort()
+
+    def pick(q: float) -> float:
+        return deltas[min(len(deltas) - 1, int(q * len(deltas)))]
+
+    return {"p50": pick(0.50), "p95": pick(0.95), "p99": pick(0.99)}
 
 
 def qoe_score(token_times: List[float], arrival: float, *, expected_ttft: float,
@@ -49,7 +73,8 @@ def finalize_request(seq: SeqState, *, expected_ttft: float = 1.0,
         num_prompt=seq.prompt_len, num_generated=n,
         prefix_hit_tokens=seq.prefix_hit_tokens, preemptions=seq.preemptions,
         qoe=qoe_score(seq.token_times, arrival, expected_ttft=expected_ttft,
-                      expected_tds=expected_tds))
+                      expected_tds=expected_tds),
+        token_times=list(seq.token_times))
 
 
 @dataclasses.dataclass

@@ -1,7 +1,12 @@
 """Jit'd entry point for the batched grouped LoRA matmul with backend
 dispatch — the same 3-impl pattern as ``flash_attention`` / ``kv_quant`` /
 ``paged_attention``: 'pallas' on TPU, 'interpret' (Pallas-on-CPU
-validation), 'ref' (jnp oracle, the CPU serving default)."""
+validation), 'ref' (jnp oracle, the CPU serving default).
+
+Shard-oblivious under tensor parallelism (docs/sharding.md): the sharded
+runner slices the stacked A/B tables along whichever of Din/Dout is the
+partitioned heads/hidden axis and calls this op per shard at 1/mp width;
+the rank axis stays replicated and the adapter-id vector is mesh-global."""
 from __future__ import annotations
 
 import functools

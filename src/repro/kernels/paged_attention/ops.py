@@ -8,6 +8,12 @@ Two call layouts:
     sequence. This is what ``models.attention.attn_decode_paged`` calls; it
     normalizes index dtypes (engine tables are host int64) and regroups heads
     into (KV, G) GQA order.
+
+Both are shard-oblivious: under tensor-parallel serving (docs/sharding.md)
+the sharded runner calls them inside ``shard_map`` with per-shard q/pages
+that hold only local heads — attention is embarrassingly parallel over
+heads, so the kernels run unchanged at 1/mp width and the cross-shard
+all-reduce happens later, after the output projection.
 """
 from __future__ import annotations
 

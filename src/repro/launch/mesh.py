@@ -36,3 +36,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for unit tests (uses however many host devices exist)."""
     return make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_serving_mesh(data_axis: int = 1, model_axis: int = 1):
+    """(data, model) mesh for the sharded paged backend (docs/sharding.md).
+
+    Validates the device count up front with an actionable message — the
+    generic jax.make_mesh error ("cannot reshape array") surfaces deep in
+    engine construction otherwise. On CPU hosts run the process under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set BEFORE the
+    first jax import; tests/test_distributed.py shows the subprocess
+    pattern)."""
+    need = data_axis * model_axis
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"serving mesh (data={data_axis}, model={model_axis}) needs "
+            f"{need} devices but only {have} are visible — on CPU, set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before the "
+            "first jax import")
+    return make_mesh((data_axis, model_axis), ("data", "model"))

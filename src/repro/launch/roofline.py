@@ -118,6 +118,58 @@ def model_flops(cfg: ModelConfig, shape_name: str) -> float:
 
 
 # ---------------------------------------------------------------------------
+# analytic decode-step bound (sharded paged serving, docs/sharding.md)
+# ---------------------------------------------------------------------------
+
+def decode_step_bound(cfg: ModelConfig, *, batch: int, seq_len: int,
+                      model_shards: int = 1, kv_sharded: bool = True,
+                      ff_sharded: bool = False, dtype_bytes: int = 2,
+                      kv_dtype_bytes: int = 2) -> Dict[str, float]:
+    """Roofline bound for ONE tensor-parallel paged decode step.
+
+    The per-device terms of the sharded hot path (mp = ``model_shards``):
+
+      compute    = 2 * N_active * batch / mp / PEAK_FLOPS
+      memory     = (param_bytes / mp + kv_bytes / kv_div) / HBM_BW
+                   (kv_div = mp when the KV heads shard, 1 in the
+                   replicated-KV GQA fallback — the fallback's cost is
+                   exactly this lost divisor)
+      collective = psum payload / (ICI_LINKS_USED * LINK_BW), with one
+                   all-reduce per layer after the attention output
+                   projection plus one per MLP layer when the hidden axis
+                   is sharded; a ring all-reduce moves
+                   2*(mp-1)/mp * batch * d_model * dtype_bytes per device.
+
+    Returns the three terms, their roofline combination ``t_step_s``
+    (max(compute, memory) + collective — collectives on the ICI don't
+    overlap the matmuls in this model) and the implied ``tokens_per_s``
+    upper bound. ``bench_sharded.py`` reports measured tokens/s as a
+    fraction of this bound; ``mp = 1`` reproduces the single-device paged
+    bound so the fraction is comparable across mesh sizes."""
+    mp = max(1, model_shards)
+    n = param_counts(cfg)["active"]
+    embed = cfg.vocab_size * cfg.d_model
+    flops = 2.0 * (n - embed + embed) * batch / mp  # head matmul included
+    t_compute = flops / PEAK_FLOPS
+    param_bytes = n * dtype_bytes / mp
+    n_attn = sum(1 for s in cfg.layer_specs() if s.mixer == "attn")
+    kv_div = mp if kv_sharded else 1
+    kv_bytes = (2 * n_attn * cfg.kv_dim * seq_len * batch *
+                kv_dtype_bytes) / kv_div
+    t_memory = (param_bytes + kv_bytes) / HBM_BW
+    t_coll = 0.0
+    if mp > 1:
+        payload = 2.0 * (mp - 1) / mp * batch * cfg.d_model * dtype_bytes
+        n_psum = n_attn + (sum(1 for s in cfg.layer_specs() if s.ff == "mlp")
+                           if ff_sharded else 0)
+        t_coll = n_psum * payload / (ICI_LINKS_USED * LINK_BW)
+    t_step = max(t_compute, t_memory) + t_coll
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "t_step_s": t_step,
+            "tokens_per_s": batch / t_step if t_step else float("inf")}
+
+
+# ---------------------------------------------------------------------------
 # report
 # ---------------------------------------------------------------------------
 

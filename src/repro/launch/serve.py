@@ -56,6 +56,14 @@ def main():
     ap.add_argument("--adapter-pool-pages", type=int, default=0,
                     help="cap on KV-pool pages the adapter store may rent "
                          "(0 = share the pool freely)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-axis size of the serving mesh: shard the "
+                         "paged/speculative/LoRA hot paths by attention "
+                         "head over this many devices (docs/sharding.md; "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-axis size of the serving mesh (with --tp)")
     # BooleanOptionalAction so --no-debug actually works (a store_true flag
     # defaulting to True could never be switched off)
     ap.add_argument("--debug", action=argparse.BooleanOptionalAction,
@@ -87,10 +95,13 @@ def main():
     lora = LoRAConfig(rank=args.lora_rank,
                       pool_pages=args.adapter_pool_pages) \
         if args.num_adapters else None
+    from repro.sharding import ShardingConfig
+    sharding = ShardingConfig(data_axis=args.dp, model_axis=args.tp) \
+        if args.tp * args.dp > 1 else None
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
         execution_backend=args.backend, speculative=speculative,
-        kv_quant=kv_quant, lora=lora,
+        kv_quant=kv_quant, lora=lora, sharding=sharding,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
     for a in range(args.num_adapters):
@@ -121,6 +132,12 @@ def main():
     if kv_quant is not None and engine.store.quantized:
         quant = (f", kv_quant={kv_quant.bits}bit "
                  f"({engine.store.kv_fp16_bytes_per_block() / engine.store.kv_bytes_per_block():.2f}x capacity vs fp16)")
+    tp = ""
+    if sharding is not None and engine.paged_runner is not None:
+        r = engine.paged_runner
+        tp = (f", mesh=(data={args.dp}, model={args.tp}) "
+              f"kv_sharded={getattr(r, 'kv_sharded', False)} "
+              f"dev_kv_bytes/block={r.device_kv_bytes_per_block()}")
     mlora = ""
     if engine.adapters is not None:
         st = engine.adapters.stats
@@ -132,7 +149,7 @@ def main():
           f"({engine.paged_steps} paged), "
           f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
           f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms"
-          f"{spec}{quant}{mlora}")
+          f"{spec}{quant}{tp}{mlora}")
 
 
 if __name__ == "__main__":

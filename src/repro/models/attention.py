@@ -326,16 +326,38 @@ def _qkv(p, cfg, x, lora=None, lora_ids=None, impl: str = "auto"):
     return q, k, v
 
 
-def proj_out_lora(p_wo, x, lora=None, lora_ids=None, impl: str = "auto"):
+def proj_out_lora(p_wo, x, lora=None, lora_ids=None, impl: str = "auto",
+                  tp_axis: Optional[str] = None):
     """``proj_out`` plus the per-row ``wo`` adapter delta (input is the
-    pre-projection head layout (B, C, H, hd), flattened for the adapter)."""
-    out = proj_out(p_wo, x)
+    pre-projection head layout (B, C, H, hd), flattened for the adapter).
+
+    With ``tp_axis`` set (the sharded paged path, docs/sharding.md) each
+    shard holds a head slice of ``x`` and the matching ``wo`` rows, so the
+    einsum — and the ``wo`` adapter delta, whose A factor is sharded over
+    the same flattened head axis — produce PARTIAL sums. One ``psum``
+    completes them; it must run before the bias add because the bias is
+    replicated (summing it across shards would scale it by the axis size).
+    With ``tp_axis=None`` the original single-device addition order is kept
+    bit-for-bit."""
+    if tp_axis is None:
+        out = proj_out(p_wo, x)
+        if lora is not None:
+            from repro.kernels.lora import bgmv
+
+            B, C, H, hd = x.shape
+            out = out + bgmv(x.reshape(B, C, H * hd), lora["wo"]["a"],
+                             lora["wo"]["b"], lora_ids, impl=impl)
+        return out
+    out = jnp.einsum("bshk,hkd->bsd", x, p_wo["w"])
     if lora is not None:
         from repro.kernels.lora import bgmv
 
         B, C, H, hd = x.shape
         out = out + bgmv(x.reshape(B, C, H * hd), lora["wo"]["a"],
                          lora["wo"]["b"], lora_ids, impl=impl)
+    out = jax.lax.psum(out, tp_axis)
+    if "b" in p_wo:
+        out = out + p_wo["b"]
     return out
 
 
@@ -480,7 +502,8 @@ def _attn_chunk_quant(p, cfg, spec, x, pages, block_tables, lengths, *,
     out = paged_attend_extend_quant(
         q, pages["k"], pages["v"], k_tail, v_tail, block_tables, lengths,
         tail_start, scale=scale, deq_dtype=cfg.dtype, impl=impl)
-    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl,
+                        tp_axis=cfg.tp_axis)
     return out, pages, (k_new, v_new)
 
 
@@ -528,7 +551,8 @@ def attn_decode_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
     out = paged_attend(q, k_pages, v_pages, block_tables, pos + 1,
                        scale=scale, impl=impl)
-    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl,
+                        tp_axis=cfg.tp_axis)
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 
@@ -596,7 +620,8 @@ def attn_extend_paged(p, cfg, spec, x, pages, block_tables, lengths, *,
     scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
     out = paged_attend_extend(q, k_pages, v_pages, block_tables, lengths,
                               scale=scale, impl=impl)
-    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl)
+    out = proj_out_lora(p["wo"], out, lora, lora_ids, impl,
+                        tp_axis=cfg.tp_axis)
     return out, {"k": k_pages, "v": v_pages}, (k_new, v_new)
 
 

@@ -71,10 +71,26 @@ def mlp_apply(p, cfg, x, lora=None, lora_ids=None, impl: str = "auto"):
         h = h + bgmv(x, lora["w1"]["a"], lora["w1"]["b"], lora_ids, impl=impl)
     h = lconstraint(h, ("batch", None, "ff"))
     if is_glu(cfg.activation):
+        # under tensor parallelism (cfg.tp_ff_sharded) the runner PERMUTED
+        # w1's columns so every shard's local block is [u_i ; g_i] — this
+        # split stays a purely local op (docs/sharding.md)
         u, g = jnp.split(h, 2, axis=-1)
         h = glu_inner_act(cfg.activation)(g) * u
     else:
         h = glu_inner_act(cfg.activation)(h)
+    if cfg.tp_axis is not None and cfg.tp_ff_sharded:
+        # shard-local w2 rows (and w2-adapter A rows) produce partial sums;
+        # complete them BEFORE the replicated bias — psum after the bias add
+        # would scale the bias by the model-axis size
+        y = jnp.einsum("...i,io->...o", h, p["w2"]["w"])
+        if lora is not None and "w2" in lora:
+            from repro.kernels.lora import bgmv
+            y = y + bgmv(h, lora["w2"]["a"], lora["w2"]["b"], lora_ids,
+                         impl=impl)
+        y = jax.lax.psum(y, cfg.tp_axis)
+        if "b" in p["w2"]:
+            y = y + p["w2"]["b"]
+        return y
     y = dense(p["w2"], h)
     if lora is not None and "w2" in lora:
         from repro.kernels.lora import bgmv

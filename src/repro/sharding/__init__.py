@@ -1,7 +1,9 @@
+from repro.sharding.config import ShardingConfig  # noqa: F401
 from repro.sharding.rules import (  # noqa: F401
     DEFAULT_RULES,
     Rules,
     current_rules,
+    serving_tp_rules,
     shard_map,
     use_rules,
 )

@@ -1,0 +1,44 @@
+"""Serving-time mesh configuration (tensor-parallel paged serving).
+
+Deliberately jax-free: ``tools/check_docs.py`` ast-parses this file to
+validate ``ShardingConfig.*`` citations in the docs, and the engine config
+must be constructible before any device runtime exists.
+
+The serving mesh is ``(data, model)`` (docs/sharding.md):
+
+* ``model`` — Megatron-style tensor parallelism over attention heads (and
+  the MLP hidden axis when divisible). KV page stores are partitioned by
+  head along this axis, so per-shard page bytes — and therefore resident
+  KV capacity at a fixed per-device HBM budget — scale with its size.
+* ``data`` — replication for fleet-style throughput. The paged hot path
+  keeps the batch replicated across it (serving batches are small and
+  latency-bound); it exists so one process can model the production mesh
+  shape the roofline analyzes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Device-mesh layout for the sharded paged backend.
+
+    ``model_axis * data_axis`` must not exceed the visible device count
+    (``--xla_force_host_platform_device_count`` provides host devices for
+    CPU testing). ``model_axis == 1`` with ``data_axis == 1`` is the
+    single-device layout — ``EngineConfig.sharding = None`` is equivalent
+    and skips the sharded runner entirely.
+    """
+    model_axis: int = 1  # tensor-parallel shards (heads / KV / ff / LoRA)
+    data_axis: int = 1   # replicas; batch stays replicated across it
+
+    def __post_init__(self):
+        if self.model_axis < 1 or self.data_axis < 1:
+            raise ValueError(
+                f"mesh axes must be >= 1, got model_axis={self.model_axis} "
+                f"data_axis={self.data_axis}")
+
+    @property
+    def num_devices(self) -> int:
+        return self.model_axis * self.data_axis

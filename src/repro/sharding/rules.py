@@ -137,3 +137,27 @@ class Rules:
             shape_tree,
             is_leaf=lambda t: isinstance(t, tuple),
         )
+
+
+def serving_tp_rules(mesh: Mesh, *, kv_sharded: bool,
+                     ff_sharded: bool) -> Rules:
+    """Rules for the sharded paged serving path (docs/sharding.md).
+
+    Unlike ``DEFAULT_RULES`` this binds ONLY the tensor-parallel axes the
+    sharded runner decided to split — heads always, KV heads and the MLP
+    hidden axis only when the runner found them divisible. The decisions
+    are made ONCE by the runner and forced through the mapping rather than
+    left to the per-leaf divisibility fallback: the fallback decides leaf
+    by leaf, and a GLU ``w1`` (2*d_ff columns, divisible) paired with a
+    non-divisible ``w2`` (d_ff rows, replicated) would produce local
+    shapes no single local model config can describe. Everything else —
+    vocab, embed, LoRA ranks, layer stacks — stays replicated: serving
+    batches are small, and the single post-projection all-reduce is the
+    only collective the hot path pays."""
+    mapping = {name: None for name in DEFAULT_RULES}
+    mapping.update({
+        "heads": "model",
+        "kv_heads": "model" if kv_sharded else None,
+        "ff": "model" if ff_sharded else None,
+    })
+    return Rules(mesh, mapping)

@@ -27,6 +27,7 @@ BENCH_MODULES = [
     "bench_moe",
     "bench_paging",
     "bench_prefix_cache",
+    "bench_sharded",
     "bench_speculative",
 ]
 
@@ -53,6 +54,11 @@ def test_bench_entrypoint_runs(name, monkeypatch):
         monkeypatch.setattr(mod, "make_requests", _tiny_make_requests)
     if hasattr(mod, "timed"):
         monkeypatch.setattr(mod, "timed", _tiny_timed)
+    if name == "bench_sharded":
+        # the sweep runs in a child process (forced-host devices), which
+        # monkeypatched module bindings can't reach — clamp via its env knobs
+        monkeypatch.setenv("BENCH_SHARDED_REQUESTS", "2")
+        monkeypatch.setenv("BENCH_SHARDED_MAX_NEW", "4")
     mod.main()
 
 

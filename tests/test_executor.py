@@ -604,3 +604,146 @@ def test_quant_store_capacity_and_migration(olmo):
         else:  # (codes, scale, zero, staging) per quantized leaf
             for x, y in zip(b, a):
                 np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel sharded runner (8 host devices in a subprocess — device
+# count is locked at first jax init, same idiom as tests/test_distributed.py)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import (EngineConfig, LLMEngine, LoRAConfig, Request,
+                        SamplingParams, SpeculativeConfig, make_adapter)
+from repro.core.executor.sharded import ShardedPagedRunner
+from repro.core.kv_quant import QuantConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.models import build_model, split_params
+from repro.sharding import ShardingConfig
+
+assert len(jax.devices()) == 8
+
+cfg = configs.smoke_config("olmo-1b")
+m = build_model(cfg)
+params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+
+
+def ecfg(mp=0, backend="auto", **kw):
+    base = dict(block_size=8, num_blocks=128, num_state_slots=16,
+                max_model_len=128, execution_backend=backend,
+                sharding=ShardingConfig(model_axis=mp) if mp else None,
+                scheduler=SchedulerConfig(max_batch_slots=4,
+                                          max_batched_tokens=48,
+                                          prefill_chunk=16))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def drive(model, p, c, prompts, max_new=6, adapters=None, aids=None):
+    eng = LLMEngine(model, p, c)
+    for aid, w in (adapters or {}).items():
+        eng.register_adapter(aid, w)
+    for i, pr in enumerate(prompts):
+        eng.add_request(Request(
+            request_id=f"r{i}", prompt=pr,
+            adapter_id=aids[i] if aids else None,
+            sampling=SamplingParams(max_new_tokens=max_new)))
+    eng.run()
+    return eng
+
+
+def streams(eng, n):
+    return {f"r{i}": eng.seqs[f"r{i}"].generated for i in range(n)}
+
+
+rng = np.random.default_rng(11)
+prompts = [list(map(int, rng.integers(2, cfg.vocab_size,
+                                      size=int(rng.integers(10, 40)))))
+           for _ in range(3)]
+
+# ---- fp: sharded == single-device paged == gathered, and capacity -------
+g = drive(m, params, ecfg(backend="gathered"), prompts)
+p1 = drive(m, params, ecfg(), prompts)
+p4 = drive(m, params, ecfg(mp=4), prompts)
+r4 = p4.paged_runner
+assert isinstance(r4, ShardedPagedRunner) and r4.kv_sharded
+assert not isinstance(p1.paged_runner, ShardedPagedRunner)
+assert streams(g, 3) == streams(p1, 3) == streams(p4, 3)
+assert p4.host_copy_bytes == 0
+assert (p4.store.kv_bytes_per_block() /
+        r4.device_kv_bytes_per_block()) >= 3.5
+print("SHARDED_FP_OK")
+
+# ---- kv_quant: quantized pages shard the same way -----------------------
+q1 = drive(m, params, ecfg(kv_quant=QuantConfig(bits=8)), prompts)
+q4 = drive(m, params, ecfg(mp=4, kv_quant=QuantConfig(bits=8)), prompts)
+assert q4.store.quantized and isinstance(q4.paged_runner, ShardedPagedRunner)
+assert streams(q1, 3) == streams(q4, 3)
+assert q4.host_copy_bytes == 0
+print("SHARDED_QUANT_OK")
+
+# ---- mixed-adapter LoRA: BGMV tables shard over the same axis -----------
+lc = LoRAConfig(rank=4, alpha=8.0, max_loaded_adapters=4)
+adapters = {f"a{j}": make_adapter(cfg, lc, seed=j + 1) for j in range(3)}
+aids = ["a0", "a1", None]
+l1 = drive(m, params, ecfg(lora=lc), prompts, adapters=adapters, aids=aids)
+l4 = drive(m, params, ecfg(mp=4, lora=lc), prompts, adapters=adapters,
+           aids=aids)
+assert streams(l1, 3) == streams(l4, 3)
+assert l4.host_copy_bytes == 0
+print("SHARDED_LORA_OK")
+
+# ---- speculative decode verifies through the sharded paged runner -------
+s1 = drive(m, params, ecfg(speculative=SpeculativeConfig(num_draft_tokens=3)),
+           prompts)
+s4 = drive(m, params, ecfg(mp=4,
+                           speculative=SpeculativeConfig(num_draft_tokens=3)),
+           prompts)
+assert streams(p1, 3) == streams(s1, 3) == streams(s4, 3)
+print("SHARDED_SPEC_OK")
+
+# ---- GQA replicated-KV fallback: kv_heads % mp != 0 keeps KV replicated,
+# permuting the head layout so each shard owns whole query groups ---------
+gcfg = dataclasses.replace(cfg, num_heads=6, num_kv_heads=3)
+gm = build_model(gcfg)
+gparams, _ = split_params(gm.init(jax.random.PRNGKey(0), max_seq=256))
+gp = [pr[:16] for pr in prompts]
+f1 = drive(gm, gparams, ecfg(), gp, max_new=4)
+f2 = drive(gm, gparams, ecfg(mp=2), gp, max_new=4)
+assert f2.paged_runner.kv_sharded is False
+assert streams(f1, 3) == streams(f2, 3)
+assert f2.host_copy_bytes == 0
+print("SHARDED_GQA_FALLBACK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_cross_backend_determinism():
+    """ShardedPagedRunner == single-device paged == gathered, greedy
+    token-for-token, across fp / kv_quant / mixed-adapter LoRA /
+    speculative / the replicated-KV GQA fallback — on a forced-host
+    8-device mesh (docs/sharding.md)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                          capture_output=True, text=True, timeout=1800,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."),
+                          env=env)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for sentinel in ("SHARDED_FP_OK", "SHARDED_QUANT_OK", "SHARDED_LORA_OK",
+                     "SHARDED_SPEC_OK", "SHARDED_GQA_FALLBACK_OK"):
+        assert sentinel in out, (sentinel, out[-4000:])
