@@ -9,7 +9,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import Request, SamplingParams
 from repro.core.scheduler import SchedulerConfig
 
@@ -52,14 +53,25 @@ def run_continuous(cfg, m, params, requests, backend="gathered"):
     eng.run()
     tokens = sum(len(s.generated) for s in eng.seqs.values())
     wb = eng.paged_runner.writeback_bytes if eng.paged_runner else 0
-    return tokens, eng.steps, time.perf_counter() - t0, eng.host_copy_bytes, wb
+    dt = time.perf_counter() - t0
+    tag = f"continuous_{backend}"
+    record(tokens_per_s={tag: tokens / dt},
+           latency_percentiles={tag: engine_percentiles(eng)},
+           counters={tag: {"steps": int(eng.steps),
+                           "host_copy_bytes": int(eng.host_copy_bytes),
+                           "writeback_bytes": int(wb)}},
+           metrics={tag: eng.metrics_snapshot()})
+    return tokens, eng.steps, dt, eng.host_copy_bytes, wb
 
 
 def main():
     rng = np.random.default_rng(0)
     cfg, m, params = small_model()
     reqs = make_requests(cfg, 12, rng, gen_lo=2, gen_hi=30)
+    record(workload={"n_requests": len(reqs), "gen_lo": 2, "gen_hi": 30})
     tok_s, steps_s, dt_s = run_static(cfg, m, params, reqs)
+    record(tokens_per_s={"static": tok_s / max(dt_s, 1e-9)},
+           counters={"static": {"steps": int(steps_s)}})
     tok_c, steps_c, dt_c, hcb_c, _ = run_continuous(cfg, m, params, reqs)
     tok_p, steps_p, dt_p, hcb_p, wb_p = run_continuous(cfg, m, params, reqs,
                                                        backend="auto")

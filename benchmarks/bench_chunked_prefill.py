@@ -19,7 +19,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import Request, SamplingParams
 from repro.core.scheduler import SchedulerConfig
 
@@ -136,6 +137,15 @@ def prefill_backends():
              f"paged_steps={peng.paged_steps};"
              f"writeback_bytes={peng.paged_runner.writeback_bytes};"
              f"speedup_vs_gathered={ratio:.2f}x")
+        record(tokens_per_s={f"prefill_gathered_{tag}": gtps,
+                             f"prefill_paged_{tag}": ptps},
+               latency_percentiles={f"prefill_paged_{tag}":
+                                    engine_percentiles(peng)},
+               counters={f"prefill_{tag}": {
+                   "gathered_host_copy_bytes": int(geng.host_copy_bytes),
+                   "paged_writeback_bytes":
+                       int(peng.paged_runner.writeback_bytes)}},
+               metrics={f"prefill_paged_{tag}": peng.metrics_snapshot()})
 
 
 def _quant8():
@@ -152,6 +162,9 @@ def main():
     emit("chunked_prefill_on", stall_on * 1e6,
          f"max_token_gap_ms={stall_on*1e3:.1f};median_ms={med_on*1e3:.1f};"
          f"stall_ratio_off_over_on={stall_off/max(stall_on,1e-9):.2f}")
+    record(workload={"scenario": "long prompt lands mid-decode"},
+           counters={"stall": {"max_gap_ms_chunked": stall_on * 1e3,
+                               "max_gap_ms_unchunked": stall_off * 1e3}})
     prefill_backends()
 
 

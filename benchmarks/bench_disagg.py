@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, small_model
+from benchmarks.common import emit, make_engine, record, small_model
 from repro.core import EngineConfig, Request, SamplingParams
 from repro.core.disagg import DisaggregatedServer
 from repro.core.scheduler import SchedulerConfig
@@ -91,7 +91,7 @@ def run_disagg():
             if tprev is not None:
                 gaps.append(now - tprev)
             tprev = now
-    return (max(gaps[1:]) if len(gaps) > 1 else 0.0), srv.stats
+    return (max(gaps[1:]) if len(gaps) > 1 else 0.0), srv.stats, srv
 
 
 def main():
@@ -99,13 +99,22 @@ def main():
     # so the decode instance still pays wall time while prefill runs — the
     # separation shows up as decode steps never CONTAINING prefill work. On
     # real disaggregated hardware the instances overlap fully.
-    stall_dis, stats = run_disagg()
+    stall_dis, stats, srv = run_disagg()
     stall_colo = run_colocated()
     emit("disagg_colocated", stall_colo * 1e6,
          f"max_decode_gap_ms={stall_colo*1e3:.1f}")
     emit("disagg_split", stall_dis * 1e6,
          f"max_decode_gap_ms={stall_dis*1e3:.1f};migrations={stats.migrated};"
          f"kv_transfer_bytes={stats.transfer_bytes}")
+    record(workload={"bg_prompt_len": 120, "fg_max_new": 40},
+           counters={"max_decode_gap_ms": {"colocated": stall_colo * 1e3,
+                                           "disagg": stall_dis * 1e3},
+                     "migrated": int(stats.migrated),
+                     "kv_transfer_bytes": int(stats.transfer_bytes)},
+           metrics={"prefill_instance":
+                    srv.prefill_engine.metrics_snapshot(),
+                    "decode_instance":
+                    srv.decode_engine.metrics_snapshot()})
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, record, timed
 from repro.kernels.flash_attention import flash_prefill_attention
 from repro.kernels.paged_attention import paged_decode_attention
 
@@ -19,11 +19,13 @@ def main():
     bt = jnp.asarray(np.stack([rng.choice(NB, NP, replace=False)
                                for _ in range(B)]), jnp.int32)
     ln = jnp.full((B,), NP * P, jnp.int32)
+    record(workload={"B": B, "pages": NP, "page_size": P, "head_dim": D})
     for impl in ("ref", "interpret"):
         fn = lambda: paged_decode_attention(q, k, v, bt, ln, scale=0.125,
                                             impl=impl).block_until_ready()
         _, dt = timed(fn, warmup=2, iters=5)
         emit(f"paged_attention_{impl}", dt * 1e6, f"B={B};pages={NP};P={P}")
+        record(counters={f"paged_attention_{impl}_us": dt * 1e6})
 
     S, H = 256, 4
     q2 = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
@@ -35,6 +37,7 @@ def main():
                                              kv_block=64).block_until_ready()
         _, dt = timed(fn, warmup=1, iters=3)
         emit(f"flash_prefill_{impl}", dt * 1e6, f"B={B};S={S}")
+        record(counters={f"flash_prefill_{impl}_us": dt * 1e6})
 
 
 if __name__ == "__main__":

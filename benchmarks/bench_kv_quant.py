@@ -12,7 +12,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import Request
 from repro.core.kv_quant import QuantConfig, compression_ratio, quant_error
 
@@ -65,6 +66,7 @@ def backend_comparison():
 
     rows = {}
     tokens = {}
+    record(workload={"n_requests": len(reqs), "bits": 8, "block_size": 32})
     for name, kw in setups.items():
         eng = make_engine(enable_prefix_cache=False, block_size=32, **kw)
         run_pass(eng, "warm")  # jit compilation out of the timed passes
@@ -72,6 +74,9 @@ def backend_comparison():
         _, dt2, _ = run_pass(eng, "timed2")  # best-of-2 rides out load spikes
         rows[name] = (toks, min(dt, dt2), eng)
         tokens[name] = gen
+        record(tokens_per_s={name: toks / max(min(dt, dt2), 1e-9)},
+               latency_percentiles={name: engine_percentiles(eng)},
+               metrics={name: eng.metrics_snapshot()})
 
     tok_g, dt_g, eng_g = rows["gathered_quant"]
     tok_f, dt_f, eng_f = rows["paged_fp"]

@@ -21,7 +21,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import (EngineConfig, LLMEngine, LoRAConfig, Request,
                         make_adapter, merge_adapter)
 from repro.core.scheduler import SchedulerConfig
@@ -112,6 +113,16 @@ def batched_vs_swap_merge(n_adapters: int = 4, n_requests: int = 8,
     rate_b = tok_b / max(dt_b, 1e-9)
     rate_s = tok_s / max(dt_s, 1e-9)
     speedup = rate_b / max(rate_s, 1e-9)
+    record(workload={"n_requests": n_requests, "n_adapters": n_adapters,
+                     "rank": rank, "gen": gen},
+           tokens_per_s={"batched_multi_adapter": rate_b,
+                         "swap_merge_serial": rate_s},
+           latency_percentiles={"batched_multi_adapter":
+                                engine_percentiles(eng)},
+           counters={"store": {"hits": int(st.hits),
+                               "misses": int(st.misses),
+                               "evictions": int(st.evictions)}},
+           metrics={"batched_multi_adapter": eng.metrics_snapshot()})
     emit("lora_swap_merge_serial", 1e6 * dt_s / max(tok_s, 1),
          f"decode_tokens={tok_s:.0f};decode_tok_per_s={rate_s:.1f};"
          f"adapters={n_adapters}")
@@ -151,6 +162,10 @@ def adapter_churn(n_adapters: int = 6, slots: int = 2, gen: int = 8):
          f"rented_pages={eng.adapters.rented_pages}")
     assert st.evictions >= n_adapters - slots - 1, st
     assert eng.bm.used_blocks >= used0  # rented pages visible to the pool
+    record(counters={"churn": {"misses": int(st.misses),
+                               "evictions": int(st.evictions),
+                               "hits": int(st.hits)}},
+           metrics={"churn": eng.metrics_snapshot()})
 
 
 def main():

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record
 from repro import configs
 from repro.models import moe as moe_mod
 from repro.models.common import split_params
@@ -25,6 +25,7 @@ def main():
     x = jnp.asarray(rng.normal(size=(T, cfg.d_model)), jnp.float32)
     w, experts, _ = moe_mod.route(p, cfg, x)
     E, k = cfg.num_experts, cfg.top_k
+    record(workload={"tokens": T, "experts": E, "top_k": k})
     for cf in (1.0, 1.25, 1.5, 2.0):
         capacity = max(1, int(np.ceil(T * k / E * cf)))
         _, keep = moe_mod._dispatch_indices(experts, E, capacity)
@@ -33,6 +34,11 @@ def main():
         emit(f"moe_capacity_{cf}", 0.0,
              f"capacity={capacity};drop_rate={drop_rate:.4f};"
              f"dispatch_bytes={dispatch_bytes}")
+        # no engine in this bench: the metrics section stays per-row
+        # routing counters rather than a registry snapshot
+        record(counters={f"capacity_{cf}": {
+            "capacity": int(capacity), "drop_rate": drop_rate,
+            "dispatch_bytes": int(dispatch_bytes)}})
 
 
 if __name__ == "__main__":

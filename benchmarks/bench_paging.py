@@ -13,20 +13,29 @@ Two claims reproduced:
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from benchmarks.common import (emit, engine_percentiles, make_engine,
                                make_requests, record, small_model)
-from repro.core import Request
+from repro.core import Request, TelemetryConfig, write_chrome_trace
+
+# CI clamps (tests/test_benchmarks.py, .github/workflows/ci.yml): shrink
+# the workload so the traced pass stays seconds-not-minutes
+_N_REQ = int(os.environ.get("BENCH_PAGING_REQUESTS", "8"))
+_MAX_NEW = int(os.environ.get("BENCH_PAGING_MAX_NEW", "0"))  # 0 = default
+_TRACE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                           "TRACE_paging.json")
 
 
 def utilization():
     rng = np.random.default_rng(1)
     cfg, m, params = small_model()
     eng = make_engine(enable_prefix_cache=False)
-    reqs = make_requests(cfg, 10, rng, prompt_lo=10, prompt_hi=80, gen_lo=4,
+    n = _N_REQ if "BENCH_PAGING_REQUESTS" in os.environ else 10
+    reqs = make_requests(cfg, n, rng, prompt_lo=10, prompt_hi=80, gen_lo=4,
                          gen_hi=20)
     for r in reqs:
         eng.add_request(r)
@@ -51,12 +60,17 @@ def utilization():
          f"kv_util={util_contig:.3f};paged_advantage={util_paged/util_contig:.1f}x")
 
 
+def _workload(rng, cfg):
+    gen_lo, gen_hi = (_MAX_NEW, _MAX_NEW + 1) if _MAX_NEW else (24, 48)
+    return make_requests(cfg, _N_REQ, rng, prompt_lo=10, prompt_hi=30,
+                         gen_lo=gen_lo, gen_hi=gen_hi)
+
+
 def gathered_vs_paged():
     """Same decode-heavy workload through both execution backends."""
     rng = np.random.default_rng(2)
     cfg, m, params = small_model()
-    reqs = make_requests(cfg, 8, rng, prompt_lo=10, prompt_hi=30,
-                         gen_lo=24, gen_hi=48)
+    reqs = _workload(rng, cfg)
     rows = {}
     for backend in ("gathered", "auto"):
         eng = make_engine(enable_prefix_cache=False,
@@ -77,7 +91,8 @@ def gathered_vs_paged():
                latency_percentiles={backend: pct},
                counters={backend: {"host_copy_bytes": int(eng.host_copy_bytes),
                                    "writeback_bytes": int(wb),
-                                   "paged_steps": int(eng.paged_steps)}})
+                                   "paged_steps": int(eng.paged_steps)}},
+               metrics={backend: eng.metrics_snapshot()})
     tok_g, dt_g, hcb_g, _, _, pct_g = rows["gathered"]
     tok_p, dt_p, hcb_p, wb_p, psteps, pct_p = rows["auto"]
     emit("exec_backend_gathered", 1e6 * dt_g / max(tok_g, 1),
@@ -93,9 +108,59 @@ def gathered_vs_paged():
          f"p99={pct_p['p99'] * 1e3:.1f}ms")
 
 
+def traced_run():
+    """The observability claim (docs/observability.md): the same paged
+    workload with step tracing on vs off. Greedy outputs must match
+    token-for-token, the traced pass must emit a Perfetto-loadable
+    Chrome trace (written to ``TRACE_paging.json`` for
+    ``tools/trace_summary.py``), and the tracing overhead is reported as
+    a tokens/s ratio."""
+    rng = np.random.default_rng(3)
+    cfg, m, params = small_model()
+    reqs = _workload(rng, cfg)
+    warm = _workload(np.random.default_rng(7), cfg)
+    rows = {}
+    for label, tel in (("off", None), ("on", TelemetryConfig())):
+        eng = make_engine(enable_prefix_cache=False, execution_backend="auto",
+                          telemetry=tel)
+        for r in warm:  # absorb jit compiles outside the timed window
+            eng.add_request(Request(request_id="w-" + r.request_id,
+                                    prompt=r.prompt, sampling=r.sampling))
+        eng.run()
+        for r in reqs:
+            eng.add_request(Request(request_id=r.request_id, prompt=r.prompt,
+                                    sampling=r.sampling))
+        gen0 = sum(len(s.generated) for s in eng.seqs.values())
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(s.generated) for s in eng.seqs.values()) - gen0
+        streams = {rid: list(s.generated) for rid, s in eng.seqs.items()
+                   if not rid.startswith("w-")}
+        rows[label] = (toks, dt, streams, eng)
+    toks_off, dt_off, streams_off, _ = rows["off"]
+    toks_on, dt_on, streams_on, eng_on = rows["on"]
+    assert streams_on == streams_off, \
+        "greedy outputs diverged with telemetry enabled"
+    path = write_chrome_trace(os.path.abspath(_TRACE_PATH), eng_on.trace,
+                              metadata={"bench": "paging"})
+    ratio = (toks_on / dt_on) / max(toks_off / dt_off, 1e-9)
+    emit("paging_traced_overhead", 1e6 * dt_on / max(toks_on, 1),
+         f"tok_per_s_on={toks_on / dt_on:.1f};"
+         f"tok_per_s_off={toks_off / dt_off:.1f};"
+         f"traced_ratio={ratio:.3f};events={len(eng_on.trace.events)};"
+         f"exact_outputs=1")
+    record(tokens_per_s={"traced_on": toks_on / dt_on,
+                         "traced_off": toks_off / dt_off},
+           counters={"trace": {"events": len(eng_on.trace.events),
+                               "path": os.path.basename(path)}},
+           metrics={"traced": eng_on.metrics_snapshot()})
+
+
 def main():
     utilization()
     gathered_vs_paged()
+    traced_run()
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 
 
 from repro.core.scheduler import SchedulerConfig
@@ -38,6 +39,12 @@ def main():
          f"prefill_tokens_computed={computed_on};hit_tokens={hit};"
          f"savings={1 - computed_on / max(computed_off, 1):.2%};"
          f"hit_rate={eng.prefix_cache.stats.hit_rate:.2f}")
+    record(workload={"n_requests": 12, "shared_prefix": 64},
+           latency_percentiles={"cached": engine_percentiles(eng)},
+           counters={"prefill_tokens_computed": {"off": int(computed_off),
+                                                 "on": int(computed_on)},
+                     "hit_tokens": int(hit)},
+           metrics={"cached": eng.metrics_snapshot()})
 
 
 if __name__ == "__main__":

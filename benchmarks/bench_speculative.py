@@ -18,7 +18,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, make_engine, make_requests, small_model
+from benchmarks.common import (emit, engine_percentiles, make_engine,
+                               make_requests, record, small_model)
 from repro.core import Request, SpeculativeConfig
 from repro.models import split_params
 
@@ -86,6 +87,16 @@ def speculative_vs_paged(k: int = 4, n_requests: int = 8, gen: int = 48):
          f"k={k};acceptance={st.acceptance_rate:.3f};"
          f"tokens_per_spec_step={st.tokens_per_step:.2f};"
          f"decode_speedup={speedup:.2f}x")
+    record(workload={"n_requests": n_requests, "gen": gen, "k": k},
+           tokens_per_s={"paged_decode": tok_p / dt_p,
+                         "spec_decode": tok_s / dt_s},
+           latency_percentiles={"paged": engine_percentiles(eng_p),
+                                "speculative": engine_percentiles(eng_s)},
+           counters={"spec": {"acceptance_rate": st.acceptance_rate,
+                              "tokens_per_step": st.tokens_per_step,
+                              "decode_speedup": speedup}},
+           metrics={"paged": eng_p.metrics_snapshot(),
+                    "speculative": eng_s.metrics_snapshot()})
     return speedup, st.acceptance_rate
 
 
@@ -110,6 +121,11 @@ def hostile_draft(k: int = 4, n_requests: int = 4):
     emit("spec_hostile_draft", 0.0,
          f"acceptance={st.acceptance_rate:.3f};"
          f"disabled_at_step={st.disabled_at_step};exact_outputs=1")
+    record(counters={"hostile_draft": {
+               "acceptance_rate": st.acceptance_rate,
+               "disabled_at_step": st.disabled_at_step,
+               "exact_outputs": 1}},
+           metrics={"hostile_draft": eng_s.metrics_snapshot()})
 
 
 def main():

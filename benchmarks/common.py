@@ -98,11 +98,13 @@ def start_report(name: str) -> dict:
     ``workload`` (request-stream / engine params), ``tokens_per_s``,
     ``latency_percentiles`` (p50/p95/p99 inter-token seconds, see
     ``repro.core.metrics.latency_percentiles``), ``counters`` (byte/step
-    telemetry), and ``rows`` (every ``emit`` CSV row, structured)."""
+    telemetry), ``metrics`` (``engine.metrics_snapshot()`` registry
+    dumps, docs/observability.md), and ``rows`` (every ``emit`` CSV row,
+    structured)."""
     global _ACTIVE
     _ACTIVE = {"bench": name, "created_unix": time.time(), "workload": {},
                "tokens_per_s": {}, "latency_percentiles": {}, "counters": {},
-               "rows": []}
+               "metrics": {}, "rows": []}
     return _ACTIVE
 
 

@@ -31,3 +31,10 @@ from repro.core.sampling import (  # noqa: F401
     sampling_probs,
 )
 from repro.core.scheduler import Scheduler, SchedulerConfig, StepPlan  # noqa: F401
+from repro.core.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    StepTracer,
+    TelemetryConfig,
+    chrome_trace,
+    write_chrome_trace,
+)

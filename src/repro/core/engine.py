@@ -72,6 +72,8 @@ from repro.core.request import Request, SeqState, SeqStatus
 from repro.core.sampling import (SamplingParams, greedy_token_host,
                                  rejection_sample, sample_token)
 from repro.core.scheduler import ChunkWork, Scheduler, SchedulerConfig, StepPlan
+from repro.core.telemetry import (NULL_TRACER, MetricsRegistry, StepTracer,
+                                  TelemetryConfig)
 from repro.sharding import ShardingConfig
 
 _rejection_jit = jax.jit(rejection_sample, static_argnames=("params",))
@@ -114,6 +116,9 @@ class EngineConfig:
     # tensor-parallel paged serving on a (data, model) mesh; None or a
     # 1x1 config keeps every backend single-device (docs/sharding.md)
     sharding: Optional[ShardingConfig] = None
+    # step tracing + roofline annotation (docs/observability.md); the
+    # metrics registry is on regardless — None only disables the tracer
+    telemetry: Optional[TelemetryConfig] = None
     seed: int = 0
 
 
@@ -209,6 +214,97 @@ class LLMEngine:
         self.exact_chunks = sched_cfg.exact_chunks
         self._step_inflight: Optional[set] = None
         self._step_adapters: Optional[set] = None
+        # observability (docs/observability.md): the registry always
+        # exists; the tracer is the real thing only when configured —
+        # otherwise the shared NULL_TRACER makes every span site a no-op
+        tcfg = self.cfg.telemetry
+        self.trace = StepTracer(tcfg.trace_capacity) \
+            if tcfg is not None and tcfg.trace else NULL_TRACER
+        for part in (self.paged_runner, self.spec_runner, self.adapters):
+            if part is not None:
+                part.trace = self.trace
+        self.metrics = MetricsRegistry()
+        self._dispatch_counters = {
+            name: self.metrics.counter(f"engine.dispatch.{name}")
+            for name in ("gathered", "paged", "speculative")}
+        if self.paged_runner is not None:
+            # sharded subclasses report under their own name
+            self._dispatch_counters.setdefault(
+                self.paged_runner.name,
+                self.metrics.counter(
+                    f"engine.dispatch.{self.paged_runner.name}"))
+        self._preempt_counter = self.metrics.counter("engine.preemptions")
+        self._bound_cache: Dict[Tuple[int, int], Optional[float]] = {}
+        self._register_metrics()
+
+    def _register_metrics(self) -> None:
+        """Back the registry with the subsystems' own stats objects —
+        gauges read them live at snapshot time, so the legacy attributes
+        (``eng.bm.stats``, ``eng.spec_stats``, ...) stay authoritative."""
+        reg, bm = self.metrics, self.bm
+        reg.gauge("engine.steps", lambda: self.steps)
+        reg.gauge("engine.host_copy_bytes",
+                  lambda: self.store.host_copy_bytes)
+        reg.gauge("engine.host_transfer_bytes",
+                  lambda: self.host_transfer_bytes)
+        reg.gauge("block_manager.num_blocks", lambda: bm.num_blocks)
+        reg.gauge("block_manager.used_blocks", lambda: bm.used_blocks)
+        reg.gauge("block_manager.utilization", bm.utilization)
+        s = bm.stats
+        reg.gauge("block_manager.allocated_blocks",
+                  lambda: s.allocated_blocks)
+        reg.gauge("block_manager.freed_blocks", lambda: s.freed_blocks)
+        reg.gauge("block_manager.cow_copies", lambda: s.cow_copies)
+        reg.gauge("block_manager.peak_used", lambda: s.peak_used)
+        if self.prefix_cache is not None:
+            p = self.prefix_cache.stats
+            reg.gauge("prefix_cache.lookups", lambda: p.lookups)
+            reg.gauge("prefix_cache.hit_blocks", lambda: p.hit_blocks)
+            reg.gauge("prefix_cache.host_hit_blocks",
+                      lambda: p.host_hit_blocks)
+            reg.gauge("prefix_cache.miss_blocks", lambda: p.miss_blocks)
+            reg.gauge("prefix_cache.inserted_blocks",
+                      lambda: p.inserted_blocks)
+            reg.gauge("prefix_cache.evicted_blocks",
+                      lambda: p.evicted_blocks)
+            reg.gauge("prefix_cache.demoted_blocks",
+                      lambda: p.demoted_blocks)
+            reg.gauge("prefix_cache.hit_rate", lambda: p.hit_rate)
+        if self.adapters is not None:
+            a = self.adapters
+            reg.gauge("lora.hits", lambda: a.stats.hits)
+            reg.gauge("lora.misses", lambda: a.stats.misses)
+            reg.gauge("lora.evictions", lambda: a.stats.evictions)
+            reg.gauge("lora.loads", lambda: a.stats.loads)
+            reg.gauge("lora.load_bytes", lambda: a.stats.load_bytes)
+            reg.gauge("lora.rented_pages", lambda: a.rented_pages)
+        if self.paged_runner is not None:
+            r = self.paged_runner
+            reg.gauge("runner.paged.steps", lambda: r.steps)
+            reg.gauge("runner.paged.mirror_upload_bytes",
+                      lambda: r.mirror_upload_bytes)
+            reg.gauge("runner.paged.writeback_bytes",
+                      lambda: r.writeback_bytes)
+            reg.gauge("runner.paged.tail_upload_bytes",
+                      lambda: r.tail_upload_bytes)
+        if self.spec_runner is not None:
+            st = self.spec_stats
+            reg.gauge("spec.steps", lambda: st.steps)
+            reg.gauge("spec.proposed", lambda: st.proposed)
+            reg.gauge("spec.accepted", lambda: st.accepted)
+            reg.gauge("spec.emitted", lambda: st.emitted)
+            reg.gauge("spec.acceptance_rate", lambda: st.acceptance_rate)
+            reg.gauge("spec.tokens_per_step", lambda: st.tokens_per_step)
+            sr = self.spec_runner
+            reg.gauge("runner.spec.draft_catchup_tokens",
+                      lambda: sr.draft_catchup_tokens)
+            reg.gauge("runner.spec.draft_resets", lambda: sr.draft_resets)
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Flat name -> value dict over every registered instrument — the
+        one telemetry surface serve.py, the fleet router and the bench
+        reports consume (docs/observability.md)."""
+        return self.metrics.snapshot()
 
     @property
     def host_copy_bytes(self) -> int:
@@ -251,6 +347,7 @@ class LLMEngine:
         hit blocks inserted by whichever of them prefilled first."""
         req = seq.request
         if self.prefix_cache is not None and len(req.prompt) > self.cfg.block_size:
+            t0 = self.trace.now()
             # namespaced by adapter: a tenant's KV embeds its adapter's k/v
             # deltas, so identical token prefixes under different adapters
             # are NOT the same bytes and must never share blocks
@@ -276,6 +373,10 @@ class LLMEngine:
                 seq.block_table.append(nb)
             seq.num_computed = len(seq.block_table) * self.cfg.block_size
             seq.prefix_hit_tokens = seq.num_computed
+            if self.trace.enabled:
+                self.trace.record("prefix_lookup", "prefix_cache", t0,
+                                  self.trace.now() - t0, seq=req.request_id,
+                                  hit_tokens=seq.prefix_hit_tokens)
 
     # ------------------------------------------------------------------
     def _alloc_for(self, seq: SeqState, target_tokens: int,
@@ -322,6 +423,10 @@ class LLMEngine:
         return max(cands, key=lambda s: s.request.arrival_time)
 
     def _do_preempt(self, seq: SeqState) -> None:
+        self._preempt_counter.inc()
+        if self.trace.enabled:
+            self.trace.event("preempt", seq=seq.request_id,
+                             computed=seq.num_computed)
         self._free_seq_memory(seq)
         self.scheduler.preempt(seq)
         if self.spec_runner is not None:
@@ -356,12 +461,86 @@ class LLMEngine:
         ready, lora = self._ensure_lora(ready, inflight)
         if not ready:
             return
-        batch = marshal_batch(ready, self.cfg.block_size, self.cfg.max_model_len)
-        batch.lora = lora
+        tr = self.trace
+        with tr.span("marshal"):
+            batch = marshal_batch(ready, self.cfg.block_size,
+                                  self.cfg.max_model_len)
+            batch.lora = lora
         if not runner.supports(batch):
             runner = self.runner  # gathered fallback (e.g. extras in a decode)
-        logits_np = runner.execute(batch)
-        self._postprocess(ready, logits_np)
+        self._dispatch_counters[runner.name].inc()
+        if tr.enabled:
+            with tr.span("dispatch", track="executor",
+                         **self._dispatch_args(ready, runner)):
+                logits_np = runner.execute(batch)
+            self._chunk_spans(ready)
+            with tr.span("postprocess"):
+                self._postprocess(ready, logits_np)
+        else:
+            logits_np = runner.execute(batch)
+            self._postprocess(ready, logits_np)
+
+    def _dispatch_args(self, chunks: List[ChunkWork],
+                       runner: ModelRunner) -> dict:
+        """Span args for one dispatch (tracing-on path only). Decode
+        dispatches on the paged backends carry the analytic
+        ``decode_step_bound`` tokens/s so ``tools/trace_summary.py`` can
+        report the live-vs-roofline fraction without jax; sharded runners
+        annotate their mesh shape (docs/observability.md)."""
+        ntok = sum(c.length for c in chunks)
+        phase = "decode" if ntok == len(chunks) else "prefill"
+        args = {"backend": runner.name, "batch": len(chunks),
+                "tokens": ntok, "phase": phase}
+        mesh = getattr(runner, "mesh", None)
+        if mesh is not None:
+            args["mesh"] = "x".join(
+                f"{ax}={n}" for ax, n in mesh.shape.items())
+            args["kv_sharded"] = bool(getattr(runner, "kv_sharded", False))
+        if phase == "decode" and runner is not self.runner:
+            seq_len = max(c.start + c.length for c in chunks)
+            bound = self._decode_bound(len(chunks), seq_len)
+            if bound is not None:
+                args["bound_tokens_per_s"] = bound
+        return args
+
+    def _decode_bound(self, batch: int, seq_len: int) -> Optional[float]:
+        """Cached analytic roofline (launch/roofline.py) for one paged
+        decode step; seq_len buckets to the next power of two so the
+        cache stays small over a run. Lazy import keeps ``repro.core``
+        free of the launch layer unless tracing asks for the bound."""
+        tcfg = self.cfg.telemetry
+        if tcfg is None or not tcfg.roofline:
+            return None
+        bucket = max(16, 1 << (max(seq_len, 2) - 1).bit_length())
+        key = (batch, bucket)
+        if key not in self._bound_cache:
+            try:
+                from repro.launch.roofline import decode_step_bound
+                sh = self.cfg.sharding
+                r = self.paged_runner
+                out = decode_step_bound(
+                    self.model.cfg, batch=batch, seq_len=bucket,
+                    model_shards=sh.model_axis if sh is not None else 1,
+                    kv_sharded=bool(getattr(r, "kv_sharded", True)),
+                    ff_sharded=bool(getattr(r, "ff_sharded", False)))
+                self._bound_cache[key] = float(out["tokens_per_s"])
+            except Exception:
+                self._bound_cache[key] = None  # exotic arch: skip, once
+        return self._bound_cache[key]
+
+    def _chunk_spans(self, chunks: List[ChunkWork]) -> None:
+        """Synthesize per-chunk prefill/decode spans under the dispatch
+        just recorded (one track per batch row, seq/adapter ids in args)."""
+        tcfg = self.cfg.telemetry
+        if tcfg is None or not tcfg.chunk_spans or not self.trace.events:
+            return
+        ev = self.trace.events[-1]  # the dispatch span just appended
+        for b, ch in enumerate(chunks):
+            self.trace.record(
+                "decode" if ch.length == 1 else "prefill",
+                f"batch.row{b}", ev.ts, ev.dur, seq=ch.seq.request_id,
+                start=ch.start, len=ch.length,
+                adapter=ch.seq.request.adapter_id)
 
     def _ensure_lora(self, chunks: List[ChunkWork], inflight: set):
         """Fault the group's adapters into the paged store; returns the
@@ -492,22 +671,41 @@ class LLMEngine:
             group, lora = self._ensure_lora(group, inflight)
             if not group:
                 continue
-            batch = marshal_batch(group, self.cfg.block_size,
-                                  self.cfg.max_model_len)
-            batch.lora = lora
+            tr = self.trace
+            with tr.span("marshal"):
+                batch = marshal_batch(group, self.cfg.block_size,
+                                      self.cfg.max_model_len)
+                batch.lora = lora
+            self._dispatch_counters["speculative"].inc()
             self._rng, r_draft, r_rej = jax.random.split(self._rng, 3)
-            d_toks, d_logits, t_logits = self.spec_runner.execute_spec(
-                batch, k, sp, r_draft)
+            if tr.enabled:
+                args = self._dispatch_args(group, self.spec_runner)
+                args["k"] = k
+                # a spec step emits up to k+1 tokens per row; the per-token
+                # decode bound would misread, so the summary gets acceptance
+                # events instead of a roofline fraction for these spans
+                args.pop("bound_tokens_per_s", None)
+                with tr.span("dispatch", track="executor", **args):
+                    d_toks, d_logits, t_logits = \
+                        self.spec_runner.execute_spec(batch, k, sp, r_draft)
+                self._chunk_spans(group)
+            else:
+                d_toks, d_logits, t_logits = self.spec_runner.execute_spec(
+                    batch, k, sp, r_draft)
             # logits stay on device; only the (B, k+1) tokens come host-side
             tokens, n_acc = _rejection_jit(r_rej, d_toks, d_logits, t_logits,
                                            params=sp)
             tokens, n_acc = np.asarray(tokens), np.asarray(n_acc)
             now = time.time()
-            for b, ch in enumerate(group):
-                self._emit_spec(ch, tokens[b], int(n_acc[b]), k, now)
+            with tr.span("postprocess"):
+                for b, ch in enumerate(group):
+                    self._emit_spec(ch, tokens[b], int(n_acc[b]), k, now)
             self.spec_stats.steps += 1
             self.spec_stats.proposed += k * len(group)
             self.spec_stats.accepted += int(n_acc.sum())
+            if tr.enabled:
+                tr.event("spec_accept", batch=len(group), k=k,
+                         proposed=k * len(group), accepted=int(n_acc.sum()))
             if self.spec_cfg.min_acceptance > 0:  # else the window never drains
                 self._spec_window.append((k * len(group), int(n_acc.sum())))
         self.spec_runner.clear_pending()
@@ -596,10 +794,16 @@ class LLMEngine:
                 if seq.num_computed == 0 and not seq.generated and \
                         not seq.block_table:
                     self._prefix_lookup(seq)
-        plan = self.scheduler.plan(time.time())
+        with self.trace.span("schedule", track="scheduler"):
+            plan = self.scheduler.plan(time.time())
         if not plan.chunks:
             return 0
         self.steps += 1
+        if self.trace.enabled:
+            self.trace.event("step", step=self.steps,
+                             num_tokens=plan.num_tokens,
+                             decode=len(plan.decode),
+                             prefill=len(plan.prefill))
         self._step_inflight = {c.seq.request_id for c in plan.chunks}
         self._step_adapters = {c.seq.request.adapter_id for c in plan.chunks
                                if c.seq.request.adapter_id is not None}
@@ -680,6 +884,9 @@ class LLMEngine:
         if seq in self.scheduler.running:
             self.scheduler.running.remove(seq)
         self._free_seq_memory(seq)
+        if self.trace.enabled:
+            self.trace.event("migrate_out", seq=request_id,
+                             blocks=len(payload["blocks"]))
         return payload
 
     def import_seq(self, payload: dict) -> SeqState:
@@ -706,4 +913,7 @@ class LLMEngine:
         self.seqs[req.request_id] = seq
         self.scheduler.running.append(seq)
         self.last_import_bytes = nbytes
+        if self.trace.enabled:
+            self.trace.event("migrate_in", seq=req.request_id,
+                             bytes=nbytes, blocks=len(blocks))
         return seq

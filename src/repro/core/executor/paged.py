@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.executor.base import ExecBatch, ModelRunner, lora_arg
 from repro.core.executor.state import PagedModelState, next_pow2, pad_pow2
+from repro.core.telemetry import NULL_TRACER
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -92,7 +93,9 @@ class PagedRunner(ModelRunner):
         self.scratch_block: Optional[int] = None
         self._pages: Optional[Tuple[Dict[str, Any], ...]] = None
         self._synced_version = -1
-        # telemetry: what replaced host_copy_bytes on this path
+        # telemetry: what replaced host_copy_bytes on this path; the
+        # engine swaps in its live StepTracer when telemetry is enabled
+        self.trace = NULL_TRACER
         self.mirror_upload_bytes = 0
         self.writeback_bytes = 0
         # quantized stores only: per-step fp staged-tail uploads (the
@@ -155,6 +158,8 @@ class PagedRunner(ModelRunner):
         """Bring the device mirror up to date with the host store."""
         if self._pages is not None and self._synced_version == self.store.version:
             return
+        t0 = self.trace.now()
+        b0 = self.mirror_upload_bytes
         dirty = np.asarray(sorted(self.store.dirty_blocks), np.int32)
         num_blocks = self.cfg.num_blocks
         full = self._pages is None or len(dirty) > num_blocks // 2
@@ -199,6 +204,11 @@ class PagedRunner(ModelRunner):
                 raise
         self.store.dirty_blocks.clear()
         self._synced_version = self.store.version
+        if self.trace.enabled:
+            self.trace.record("device_sync", "executor", t0,
+                              self.trace.now() - t0, full=bool(full),
+                              dirty_blocks=int(len(dirty)),
+                              upload_bytes=self.mirror_upload_bytes - b0)
 
     # ------------------------------------------------------------------
     def call_pages(self, tables: np.ndarray, lengths: np.ndarray, C: int):

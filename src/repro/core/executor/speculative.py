@@ -40,6 +40,7 @@ from repro.core.executor.base import ExecBatch, ModelRunner, lora_arg
 from repro.core.executor.paged import PagedRunner
 from repro.core.executor.state import next_pow2
 from repro.core.sampling import SamplingParams, sample_token
+from repro.core.telemetry import NULL_TRACER
 
 
 class SpeculativeRunner(ModelRunner):
@@ -93,6 +94,7 @@ class SpeculativeRunner(ModelRunner):
         self._draft_computed: Dict[str, int] = {}
         self._draft_tables: Dict[str, List[int]] = {}
         self._catchup_chunk = 32
+        self.trace = NULL_TRACER  # engine swaps in its live tracer
         self.steps = 0
         self.writeback_bytes = 0
         self.draft_catchup_tokens = 0
@@ -236,15 +238,20 @@ class SpeculativeRunner(ModelRunner):
         executes models. The caller must follow up with ``commit`` per
         sequence once acceptance is known."""
         assert self.supports(batch)
+        tr = self.trace
         self.paged.sync()
         nmax = batch.tables.shape[1]
         draft_lora = batch.lora if self.draft_lora_ok else None
+        t0, c0 = tr.now(), self.draft_catchup_tokens
         for b, ch in enumerate(batch.chunks):
             row = None
             if draft_lora is not None:
                 row = lora_arg({"ids": draft_lora["ids"][b: b + 1],
                                 "stages": draft_lora["stages"]})
             self._sync_draft(ch.seq, nmax, lora=row)
+        if tr.enabled and self.draft_catchup_tokens > c0:
+            tr.record("draft_catchup", "executor", t0, tr.now() - t0,
+                      tokens=self.draft_catchup_tokens - c0)
         B = len(batch.chunks)
         # pad the batch to pow2: as sequences drain, per-B jit recompiles of
         # the (large) propose/verify graphs would dominate wall time.
@@ -266,6 +273,7 @@ class SpeculativeRunner(ModelRunner):
         lens_j = jnp.asarray(lengths)
         tok0 = jnp.asarray(tokens)  # (Bp, 1)
         propose = self._propose_fn(k, sp)
+        t0 = tr.now()
         try:
             d_toks, d_logits, self._draft_pages = propose(
                 self.draft_params, rng, tok0, self._draft_pages, tables_j,
@@ -274,7 +282,11 @@ class SpeculativeRunner(ModelRunner):
             # draft pages were donated into the failed call
             self._reset_draft()
             raise
+        if tr.enabled:
+            tr.record("spec_propose", "executor", t0, tr.now() - t0,
+                      batch=B, k=k)
         ver_tokens = jnp.concatenate([tok0, d_toks], axis=1)  # (B, k+1)
+        t0 = tr.now()
         try:
             t_logits, new_pages, writes = self._verify_jit(
                 self.params, ver_tokens,
@@ -286,6 +298,9 @@ class SpeculativeRunner(ModelRunner):
             self.paged._pages = None
             self.paged._synced_version = -1
             raise
+        if tr.enabled:
+            tr.record("spec_verify", "executor", t0, tr.now() - t0,
+                      batch=B, positions=k + 1)
         self.paged._pages = self.paged.strip_tails(new_pages)
         if self.store.quantized:
             # writeback deferred to commit_writes: only tokens that were

@@ -49,8 +49,10 @@ class ServingFleet:
     def _load(self, eng: LLMEngine) -> float:
         """Instance load = fraction of KV blocks in use (Llumnix's memory-
         pressure signal; running seqs would also work). Resident LoRA
-        adapters rent pool pages, so they are part of this signal."""
-        return eng.bm.used_blocks / eng.bm.num_blocks
+        adapters rent pool pages, so they are part of this signal. Read
+        through the engine's metrics registry — the router consumes the
+        same telemetry surface serve.py and the benches report."""
+        return eng.metrics.value("block_manager.utilization")
 
     def least_loaded(self) -> LLMEngine:
         return min(self.engines, key=self._load)

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.block_manager import BlockManager, OutOfBlocks
 from repro.core.lora.config import LoRAConfig
+from repro.core.telemetry import NULL_TRACER
 from repro.core.lora.registry import (AdapterRegistry, adapter_nbytes,
                                       lora_layer_sites)
 
@@ -81,6 +82,7 @@ class PagedAdapterStore:
                 f"{lora.rank})")
         self.capacity = next_pow2(lora.max_loaded_adapters + 1)
         self.stats = AdapterStoreStats()
+        self.trace = NULL_TRACER  # engine swaps in its live tracer
         self._slot_of: Dict[str, int] = {}
         self._pages_of: Dict[str, List[int]] = {}
         self._lru: "OrderedDict[str, None]" = OrderedDict()
@@ -138,6 +140,7 @@ class PagedAdapterStore:
                 self._fault_in(aid, keep)
 
     def _fault_in(self, adapter_id: str, keep) -> None:
+        t0 = self.trace.now()
         weights = self.registry.get(adapter_id)
         need = self.pages_per_adapter
         while not self._free_slots or (
@@ -161,6 +164,10 @@ class PagedAdapterStore:
         self._lru[adapter_id] = None
         self.stats.loads += 1
         self.stats.load_bytes += self.nbytes_per_adapter
+        if self.trace.enabled:
+            self.trace.record("lora_fault", "lora", t0,
+                              self.trace.now() - t0, adapter=adapter_id,
+                              bytes=self.nbytes_per_adapter, pages=need)
 
     def _upload(self, slot: int, weights) -> None:
         scale = self.lora.alpha / self.lora.rank
@@ -194,6 +201,9 @@ class PagedAdapterStore:
         del self._lru[victim]
         self._free_slots.append(slot)
         self.stats.evictions += 1
+        if self.trace.enabled:
+            self.trace.event("lora_evict", track="lora", adapter=victim,
+                             pages=self.pages_per_adapter)
         return True
 
     # ------------------------------------------------------------------

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 from repro.core.request import SeqState
@@ -39,7 +40,11 @@ def latency_percentiles(metrics: List["RequestMetrics"]) -> Dict[str, float]:
     deltas.sort()
 
     def pick(q: float) -> float:
-        return deltas[min(len(deltas) - 1, int(q * len(deltas)))]
+        # ceil-based nearest-rank: the q-quantile of n samples is the
+        # ceil(q*n)-th order statistic. The old int(q*n) index was biased
+        # one rank high at small n (p50 of 2 samples returned the max)
+        # and only returned a sane p99 via the min() clamp.
+        return deltas[max(0, math.ceil(q * len(deltas)) - 1)]
 
     return {"p50": pick(0.50), "p95": pick(0.95), "p99": pick(0.99)}
 

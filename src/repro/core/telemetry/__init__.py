@@ -1,0 +1,23 @@
+"""Observability layer: metrics registry + step tracer + trace export.
+
+Everything in this package is jax-free (docs/observability.md) — the
+config is ast-parsed by ``tools/check_docs.py`` and the exported traces
+are read back by ``tools/trace_summary.py`` without jax installed.
+"""
+from repro.core.telemetry.config import TelemetryConfig  # noqa: F401
+from repro.core.telemetry.export import (  # noqa: F401
+    chrome_trace,
+    write_chrome_trace,
+)
+from repro.core.telemetry.registry import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.core.telemetry.tracer import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    SpanEvent,
+    StepTracer,
+)

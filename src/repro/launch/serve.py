@@ -64,6 +64,10 @@ def main():
                          "--xla_force_host_platform_device_count first)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-axis size of the serving mesh (with --tp)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable step tracing and write a Perfetto-loadable "
+                         "Chrome trace-event JSON here (inspect with "
+                         "tools/trace_summary.py, docs/observability.md)")
     # BooleanOptionalAction so --no-debug actually works (a store_true flag
     # defaulting to True could never be switched off)
     ap.add_argument("--debug", action=argparse.BooleanOptionalAction,
@@ -98,10 +102,13 @@ def main():
     from repro.sharding import ShardingConfig
     sharding = ShardingConfig(data_axis=args.dp, model_axis=args.tp) \
         if args.tp * args.dp > 1 else None
+    from repro.core import TelemetryConfig
+    telemetry = TelemetryConfig() if args.trace_out else None
     engine = LLMEngine(model, params, EngineConfig(
         block_size=16, num_blocks=512, num_state_slots=64, max_model_len=256,
         execution_backend=args.backend, speculative=speculative,
         kv_quant=kv_quant, lora=lora, sharding=sharding,
+        telemetry=telemetry,
         scheduler=SchedulerConfig(max_batch_slots=8, max_batched_tokens=128,
                                   prefill_chunk=32, policy=args.policy)))
     for a in range(args.num_adapters):
@@ -144,12 +151,24 @@ def main():
         mlora = (f", lora={args.num_adapters} adapters r{lora.rank} "
                  f"(hits={st.hits} misses={st.misses} evicts={st.evictions}, "
                  f"{engine.adapters.rented_pages} pages rented)")
+    # the report line reads the unified registry — the same snapshot the
+    # fleet router and bench reports consume (docs/observability.md)
+    snap = engine.metrics_snapshot()
     print(f"{args.arch}: {len(metrics)} requests, {gen} tokens, "
           f"{gen/dt:.1f} tok/s, {engine.steps} steps "
           f"({engine.paged_steps} paged), "
-          f"host_copy={engine.host_copy_bytes/1e6:.1f}MB, "
+          f"host_copy={snap['engine.host_copy_bytes']/1e6:.1f}MB, "
+          f"kv_util_peak={snap['block_manager.peak_used']/snap['block_manager.num_blocks']:.2f}, "
+          f"preempts={snap['engine.preemptions']}, "
           f"TTFT p50={np.median([m.ttft for m in metrics])*1e3:.0f}ms"
           f"{spec}{quant}{tp}{mlora}")
+    if args.trace_out:
+        from repro.core import write_chrome_trace
+        path = write_chrome_trace(args.trace_out, engine.trace,
+                                  metadata={"arch": args.arch,
+                                            "backend": args.backend})
+        print(f"trace: {len(engine.trace.events)} events -> {path} "
+              f"(summarize with tools/trace_summary.py)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,238 @@
+"""Telemetry: tracing must never change what the engine computes (greedy
+parity on vs off), traces must be Perfetto-loadable Chrome trace JSON, the
+ring buffer must stay bounded, and the disabled path must be a true no-op."""
+import json
+
+import jax
+import pytest
+
+from repro import configs
+from repro.core import EngineConfig, LLMEngine, Request, SamplingParams
+from repro.core.metrics import RequestMetrics, latency_percentiles
+from repro.core.scheduler import SchedulerConfig
+from repro.core.telemetry import (NULL_TRACER, MetricsRegistry, StepTracer,
+                                  TelemetryConfig, chrome_trace)
+from repro.models import build_model, split_params
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = configs.smoke_config("olmo-1b")
+    m = build_model(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), max_seq=256))
+    return cfg, m, params
+
+
+def _engine_cfg(**kw):
+    base = dict(block_size=8, num_blocks=128, num_state_slots=16,
+                max_model_len=128,
+                scheduler=SchedulerConfig(max_batch_slots=4,
+                                          max_batched_tokens=48,
+                                          prefill_chunk=16))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run(m, params, cfg_kw, prompts):
+    eng = LLMEngine(m, params, _engine_cfg(**cfg_kw))
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(request_id=f"r{i}", prompt=p,
+                                sampling=SamplingParams(max_new_tokens=8)))
+    eng.run()
+    return eng, {rid: list(s.generated) for rid, s in eng.seqs.items()}
+
+
+# ---------------------------------------------------------------------------
+# tracing on/off greedy parity — telemetry is read-only by construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["gathered", "paged", "speculative"])
+def test_tracing_preserves_greedy_outputs(dense_model, rng, backend):
+    cfg, m, params = dense_model
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size,
+                                          size=int(rng.integers(10, 30)))))
+               for _ in range(4)]
+    kw = {"execution_backend": "paged" if backend == "speculative" else backend}
+    if backend == "speculative":
+        from repro.core import SpeculativeConfig
+        kw = {"execution_backend": "speculative",
+              "speculative": SpeculativeConfig(num_draft_tokens=3)}
+    eng_off, streams_off = _run(m, params, dict(kw), prompts)
+    eng_on, streams_on = _run(m, params,
+                              dict(kw, telemetry=TelemetryConfig()), prompts)
+    assert streams_on == streams_off
+    assert eng_off.trace is NULL_TRACER and not eng_off.trace.events
+    assert eng_on.trace.enabled and len(eng_on.trace.events) > 0
+    names = {ev.name for ev in eng_on.trace.events}
+    assert {"schedule", "marshal", "dispatch", "postprocess",
+            "step"} <= names
+    if backend == "speculative":
+        assert "spec_propose" in names and "spec_verify" in names
+    # both runs did identical work, so the registries must agree on it
+    for key in ("engine.steps", f"engine.dispatch.{kw['execution_backend']}"):
+        assert eng_on.metrics_snapshot()[key] == \
+            eng_off.metrics_snapshot()[key]
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event schema (what Perfetto / chrome://tracing ingest)
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema(dense_model, rng):
+    cfg, m, params = dense_model
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=12)))
+               for _ in range(3)]
+    eng, _ = _run(m, params, dict(execution_backend="paged",
+                                  telemetry=TelemetryConfig()), prompts)
+    doc = chrome_trace(eng.trace.events, metadata={"test": "schema"})
+    # round-trip through JSON: everything must be serializable
+    doc = json.loads(json.dumps(doc))
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    named_tids = set()
+    for ev in doc["traceEvents"]:
+        assert ev["pid"] == 1 and isinstance(ev["tid"], int)
+        if ev["ph"] == "M":
+            assert ev["name"] == "thread_name"
+            named_tids.add(ev["tid"])
+            continue
+        assert ev["ph"] in ("X", "i")
+        assert ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+        else:
+            assert ev["s"] == "t"
+    used_tids = {ev["tid"] for ev in doc["traceEvents"] if ev["ph"] != "M"}
+    assert used_tids <= named_tids  # every track carries a thread_name
+    # the summary CLI must digest this trace (stdlib-only, import directly)
+    import tools.trace_summary as ts
+    assert ts.main([_write(doc)]) == 0
+
+
+def _write(doc):
+    import tempfile
+    f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+    json.dump(doc, f)
+    f.close()
+    return f.name
+
+
+def test_decode_dispatches_carry_roofline_bound(dense_model, rng):
+    cfg, m, params = dense_model
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=12)))
+               for _ in range(3)]
+    eng, _ = _run(m, params, dict(execution_backend="paged",
+                                  telemetry=TelemetryConfig()), prompts)
+    decode = [ev for ev in eng.trace.events
+              if ev.name == "dispatch" and ev.args.get("phase") == "decode"]
+    assert decode
+    for ev in decode:
+        assert ev.args["bound_tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ring buffer + null-object no-op path
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_is_bounded():
+    tr = StepTracer(capacity=64)
+    for i in range(1000):
+        tr.event("e", i=i)
+    assert len(tr.events) == 64
+    assert tr.events[-1].args["i"] == 999  # newest kept, oldest dropped
+    tr.clear()
+    assert len(tr.events) == 0
+
+
+def test_null_tracer_is_noop():
+    assert not NULL_TRACER.enabled
+    s1 = NULL_TRACER.span("a", track="x", foo=1)
+    s2 = NULL_TRACER.span("b")
+    assert s1 is s2  # cached singleton span: no per-call object churn
+    with s1:
+        pass
+    NULL_TRACER.event("e")
+    NULL_TRACER.record("r", "t", 0.0, 1.0)
+    assert NULL_TRACER.events == ()
+
+
+def test_engine_without_telemetry_uses_null_tracer(dense_model):
+    cfg, m, params = dense_model
+    eng = LLMEngine(m, params, _engine_cfg())
+    assert eng.trace is NULL_TRACER
+    # telemetry config with trace=False also gets the null tracer
+    eng2 = LLMEngine(m, params, _engine_cfg(
+        telemetry=TelemetryConfig(trace=False)))
+    assert eng2.trace is NULL_TRACER
+
+
+def test_telemetry_config_validates():
+    with pytest.raises(ValueError):
+        TelemetryConfig(trace_capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    reg = MetricsRegistry()
+    c = reg.counter("a.count")
+    c.inc()
+    c.inc(4)
+    state = {"v": 7}
+    reg.gauge("a.gauge", lambda: state["v"])
+    h = reg.histogram("a.lat")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["a.count"] == 5
+    assert snap["a.gauge"] == 7
+    assert snap["a.lat.count"] == 3 and snap["a.lat.sum"] == 6.0
+    assert snap["a.lat.min"] == 1.0 and snap["a.lat.max"] == 3.0
+    assert snap["a.lat.mean"] == 2.0
+    # re-registering the same name returns the same instrument
+    assert reg.counter("a.count") is c
+    with pytest.raises(ValueError):
+        reg.histogram("a.count")  # kind mismatch
+    assert reg.value("a.gauge") == 7
+
+
+def test_engine_snapshot_is_single_source_of_truth(dense_model, rng):
+    cfg, m, params = dense_model
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=12)))
+               for _ in range(3)]
+    eng, _ = _run(m, params, dict(execution_backend="paged"), prompts)
+    snap = eng.metrics_snapshot()
+    assert snap["engine.steps"] == eng.steps
+    assert snap["engine.host_copy_bytes"] == eng.host_copy_bytes
+    assert snap["block_manager.num_blocks"] == eng.bm.num_blocks
+    assert 0.0 <= snap["block_manager.utilization"] <= 1.0
+    assert snap["runner.paged.steps"] == eng.paged_steps
+    assert snap["engine.dispatch.paged"] > 0
+
+
+# ---------------------------------------------------------------------------
+# latency_percentiles: ceil-based nearest-rank (satellite b)
+# ---------------------------------------------------------------------------
+
+def _metrics_from_deltas(deltas):
+    times = [0.0]
+    for d in deltas:
+        times.append(times[-1] + d)
+    return [RequestMetrics(request_id="x", ttft=0.0, tpot=0.0, e2e=0.0,
+                           num_prompt=1, num_generated=len(times),
+                           prefix_hit_tokens=0, preemptions=0, qoe=1.0,
+                           token_times=times)]
+
+
+def test_latency_percentiles_nearest_rank():
+    # 10 samples 1..10: ceil(.5*10)=5th -> 5, ceil(.95*10)=10th -> 10
+    m = _metrics_from_deltas(list(range(1, 11)))
+    pct = latency_percentiles(m)
+    assert pct == {"p50": 5, "p95": 10, "p99": 10}
+    # the regression the fix pins: p50 of 2 samples is the LOWER one
+    # (old int(q*n) indexing returned the max)
+    assert latency_percentiles(_metrics_from_deltas([1.0, 2.0]))["p50"] == 1.0
+    assert latency_percentiles(_metrics_from_deltas([3.0]))["p50"] == 3.0
+    assert latency_percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}

@@ -34,7 +34,7 @@ MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 CODE_REF = re.compile(r"`([\w./-]+\.(?:py|md|ya?ml|toml|txt))(?:::[\w.]+)?`")
 # `EngineConfig.max_model_len`-style config-field citations in doc prose
 CFG_REF = re.compile(r"`(EngineConfig|SchedulerConfig|SpeculativeConfig"
-                     r"|LoRAConfig|ShardingConfig)\.(\w+)`")
+                     r"|LoRAConfig|ShardingConfig|TelemetryConfig)\.(\w+)`")
 
 # where each cited config dataclass is defined (parsed with ast, not
 # imported — the checker must run without jax installed)
@@ -44,6 +44,7 @@ CFG_SOURCES = {
     "SchedulerConfig": "src/repro/core/scheduler.py",
     "LoRAConfig": "src/repro/core/lora/config.py",
     "ShardingConfig": "src/repro/sharding/config.py",
+    "TelemetryConfig": "src/repro/core/telemetry/config.py",
 }
 
 # roots a bare code reference may be relative to (doc prose often writes

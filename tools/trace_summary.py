@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Aggregate a Chrome trace-event JSON file the engine exported.
+
+    python tools/trace_summary.py TRACE_paging.json
+
+Two reports (docs/observability.md):
+  * per-phase time breakdown — complete ("X") events grouped by
+    (track, name): count, total/mean duration, share of traced wall time;
+  * decode roofline fraction — every paged decode ``dispatch`` span
+    carries the batch's token count and the analytic
+    ``decode_step_bound`` tokens/s upper bound in its args; live
+    tokens/s = tokens / duration, and live/bound is how much of the
+    step's roofline the engine realized (LLM Inference Unveiled,
+    arXiv 2402.16363).
+
+Deliberately jax-free (stdlib only): it must run anywhere the JSON
+landed, including the CI docs/tier-1 jobs. Exit 0 on success, 2 when the
+trace holds no events.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_events(path: str):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", doc if isinstance(doc, list) else [])
+    tracks = {}  # tid -> thread name (from M metadata events)
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tracks[ev.get("tid")] = ev.get("args", {}).get("name", "?")
+    spans = [ev for ev in events if ev.get("ph") == "X"]
+    instants = [ev for ev in events if ev.get("ph") == "i"]
+    return spans, instants, tracks
+
+
+def phase_breakdown(spans, tracks) -> list:
+    agg = {}
+    for ev in spans:
+        key = (tracks.get(ev.get("tid"), str(ev.get("tid"))), ev["name"])
+        cnt, tot = agg.get(key, (0, 0.0))
+        agg[key] = (cnt + 1, tot + float(ev.get("dur", 0.0)))
+    return sorted(agg.items(), key=lambda kv: -kv[1][1])
+
+
+def roofline_fractions(spans) -> list:
+    out = []
+    for ev in spans:
+        args = ev.get("args") or {}
+        if ev["name"] != "dispatch" or args.get("phase") != "decode":
+            continue
+        bound = args.get("bound_tokens_per_s")
+        dur = float(ev.get("dur", 0.0))
+        if not bound or dur <= 0:
+            continue
+        live = float(args.get("tokens", args.get("batch", 0))) / (dur * 1e-6)
+        out.append((live, float(bound)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file "
+                                  "(serve.py --trace-out / bench_paging)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="rows of the phase table to print")
+    args = ap.parse_args(argv)
+
+    spans, instants, tracks = load_events(args.trace)
+    if not spans and not instants:
+        print(f"{args.trace}: no trace events")
+        return 2
+    wall = 0.0
+    if spans:
+        t0 = min(e["ts"] for e in spans)
+        t1 = max(e["ts"] + e.get("dur", 0.0) for e in spans)
+        wall = t1 - t0
+    print(f"{args.trace}: {len(spans)} spans + {len(instants)} instants "
+          f"on {len(tracks)} tracks, {wall / 1e3:.1f}ms traced wall")
+    print(f"\n{'track':<14} {'name':<16} {'count':>6} {'total_ms':>9} "
+          f"{'mean_us':>9} {'%wall':>6}")
+    for (track, name), (cnt, tot) in phase_breakdown(spans,
+                                                     tracks)[: args.top]:
+        pct = 100.0 * tot / wall if wall else 0.0
+        print(f"{track:<14} {name:<16} {cnt:>6} {tot / 1e3:>9.2f} "
+              f"{tot / cnt:>9.1f} {pct:>6.1f}")
+
+    counts = {}
+    for ev in instants:
+        counts[ev["name"]] = counts.get(ev["name"], 0) + 1
+    if counts:
+        print("\ninstants: " + "  ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())))
+
+    fr = roofline_fractions(spans)
+    if fr:
+        fracs = sorted(live / bound for live, bound in fr)
+        mid = fracs[len(fracs) // 2]
+        print(f"\ndecode roofline: {len(fr)} annotated steps, "
+              f"live p50={statistics.median(v for v, _ in fr):.0f} tok/s, "
+              f"bound p50={statistics.median(b for _, b in fr):.0f} tok/s, "
+              f"fraction p50={mid:.4f} "
+              f"(min={fracs[0]:.4f}, max={fracs[-1]:.4f})")
+    else:
+        print("\ndecode roofline: no annotated decode dispatches "
+              "(TelemetryConfig.roofline off, or no paged decode steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
